@@ -1,0 +1,184 @@
+"""One function per paper table/figure. Each returns (rows, derived) where
+rows are CSV-able dicts. Error-rate figures (14/16) consume the results file
+written by examples/train_rsnn_timit.py when present; everything else is
+analytic + measured."""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import complexity as C
+from repro.core import rsnn
+from repro.core.rsnn import RSNNConfig
+
+BASE = RSNNConfig(hidden_dim=256)
+PRUNED = RSNNConfig(hidden_dim=128)
+RESULTS = Path(__file__).resolve().parents[1] / "runs" / "rsnn_pipeline" / "results.json"
+
+
+def _pipeline_results() -> list[dict] | None:
+    if RESULTS.exists():
+        return json.loads(RESULTS.read_text())
+    return None
+
+
+def table1_dimensions():
+    rows = []
+    for name, cfg, frac in [("baseline", BASE, 0.0),
+                            ("structured", PRUNED, 0.0),
+                            ("unstructured", PRUNED, 0.4)]:
+        rows.append({"model": name, **{k: str(v) for k, v in cfg.layer_shapes.items()},
+                     "parameters": C.num_params(cfg, frac)})
+    return rows, {"paper": "698368 / 300032 / 201728"}
+
+
+def fig12_model_size():
+    steps = [("baseline fp32", BASE, 32, 0.0),
+             ("+structured", PRUNED, 32, 0.0),
+             ("+unstructured", PRUNED, 32, 0.4),
+             ("+4bit QAT", PRUNED, 4, 0.4)]
+    rows = [{"stage": n, "MB": round(C.model_size_bytes(c, b, f) / 1e6, 3)}
+            for n, c, b, f in steps]
+    red = 1 - C.model_size_bytes(PRUNED, 4, 0.4) / C.model_size_bytes(BASE, 32)
+    return rows, {"total_reduction": f"{red:.2%}", "paper": "96.42%"}
+
+
+def fig13_complexity():
+    sp = _measured_sparsity() or C.SparsityProfile()
+    rows = [
+        {"variant": "baseline 2ts", "mmac_s": C.mmac_per_second(BASE, 2)},
+        {"variant": "+structured 2ts", "mmac_s": C.mmac_per_second(PRUNED, 2)},
+        {"variant": "+zero-skip 2ts", "mmac_s": C.mmac_per_second(PRUNED, 2, sparsity=sp)},
+        {"variant": "+merged-spike 2ts",
+         "mmac_s": C.mmac_per_second(PRUNED, 2, sparsity=sp, merged_spike=True)},
+        {"variant": "structured 1ts", "mmac_s": C.mmac_per_second(PRUNED, 1)},
+        {"variant": "+zero-skip 1ts", "mmac_s": C.mmac_per_second(PRUNED, 1, sparsity=sp)},
+    ]
+    base = rows[0]["mmac_s"]
+    return rows, {"reduction_2ts": f"{1 - rows[3]['mmac_s'] / base:.2%} (paper 89.02%)",
+                  "reduction_1ts": f"{1 - rows[5]['mmac_s'] / base:.2%} (paper 90.49%)"}
+
+
+def fig14_error_ablation():
+    res = _pipeline_results()
+    if not res:
+        return [], {"note": "run examples/train_rsnn_timit.py to populate"}
+    rows = [{"stage": r["name"], "frame_error_rate": round(r["error_rate"], 4),
+             "size_KB": round(r["size_bytes"] / 1e3, 1)} for r in res]
+    return rows, {"paper_trend": "22.2% -> 22.6% (relative degradation ~0.4pt)"}
+
+
+def fig16_time_steps():
+    res = _pipeline_results()
+    rows = []
+    if res and "ts_sweep" in (res[-1] if isinstance(res, list) else {}):
+        rows = res[-1]["ts_sweep"]
+    return rows, {"note": "error improves mildly with ts (paper Fig. 16)"}
+
+
+def fig17_cycles():
+    sp = _measured_sparsity() or C.SparsityProfile()
+    rows = []
+    for ts in (1, 2):
+        rows.append({"config": f"{ts}ts dense", "cycles": C.cycles_per_frame(PRUNED, ts)})
+        rows.append({"config": f"{ts}ts zero-skip",
+                     "cycles": round(C.cycles_per_frame(PRUNED, ts, sparsity=sp), 1)})
+    rows.append({"config": "2ts skip+merged",
+                 "cycles": round(C.cycles_per_frame(PRUNED, 2, sparsity=sp,
+                                                    merged_spike=True), 1)})
+    f = C.realtime_frequency_hz(rows[-1]["cycles"])
+    return rows, {"min_realtime_clock_kHz": round(f / 1e3, 1),
+                  "paper": "2464/1312 -> 1224/574 -> 895 @ 100 kHz"}
+
+
+def fig18_sparsity():
+    sp = _measured_sparsity()
+    src = "measured" if sp else "paper defaults"
+    sp = sp or C.SparsityProfile()
+    rows = [{"signal": "input bits", "sparsity": round(1 - sp.input_bit_density, 3)}]
+    for ts in range(2):
+        rows.append({"signal": f"L0 T{ts}", "sparsity": round(1 - sp.l0_density[ts], 3)})
+        rows.append({"signal": f"L1 T{ts}", "sparsity": round(1 - sp.l1_density[ts], 3)})
+    rows.append({"signal": "L1 union (merged)", "sparsity": round(1 - sp.fc_union_density, 3)})
+    return rows, {"source": src, "paper": "57-71%"}
+
+
+def table2_weight_access():
+    rows = [
+        {"dataflow": "layer-based", "accesses_per_frame":
+            C.weight_accesses_per_frame(BASE, 2, parallel_time_steps=False)},
+        {"dataflow": "parallel time steps", "accesses_per_frame":
+            C.weight_accesses_per_frame(BASE, 2, parallel_time_steps=True)},
+    ]
+    return rows, {"saving": "47% fewer weight-buffer reads (paper: ~50%)"}
+
+
+def _measured_sparsity() -> C.SparsityProfile | None:
+    res = _pipeline_results()
+    if not res:
+        return None
+    last = res[-1]
+    if "sparsity" not in last:
+        return None
+    s = last["sparsity"]
+    return C.SparsityProfile(
+        input_bit_density=s["input_bit_density"],
+        l0_density=tuple(s["l0_density"]), l1_density=tuple(s["l1_density"]),
+        fc_density=tuple(s["fc_density"]),
+        fc_union_density=s["fc_union_density"])
+
+
+# ----------------------------------------------------------- timing helpers
+
+
+def time_us(fn, *args, iters: int = 20) -> float:
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def bench_rsnn_forward():
+    cfg = PRUNED
+    params = rsnn.init_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 100, 40))
+    fwd = jax.jit(lambda p, x: rsnn.forward(p, x, cfg)[0])
+    us = time_us(fwd, params, x)
+    frames = 8 * 100
+    return us, {"us_per_frame": round(us / frames, 2),
+                "realtime_streams_cpu": int(frames / (us / 1e6) / 100)}
+
+
+def bench_kernels():
+    from repro.kernels import ref as kref
+    rng = np.random.default_rng(0)
+    s = jnp.asarray(rng.integers(0, 2, (2, 128, 128)), jnp.float32)
+    q = jnp.asarray(rng.integers(-8, 8, (128, 1920)), jnp.int8)
+    packed = ((q[0::2] & 0xF) | ((q[1::2] & 0xF) << 4)).astype(jnp.int8)
+    scale = jnp.ones((1920,), jnp.float32)
+    f = jax.jit(kref.merged_spike_fc_ref)
+    us = time_us(f, s, packed, scale)
+    return us, {"kernel": "merged_spike_fc (jnp oracle on CPU)"}
+
+
+def table3_power():
+    """Table III / Figs 19-20: power, energy/frame, efficiency proxies."""
+    sp = _measured_sparsity() or C.SparsityProfile()
+    cyc = C.cycles_per_frame(PRUNED, 2, sparsity=sp, merged_spike=True)
+    rows = [
+        {"point": "always-on 100 kHz", "power_uW": round(C.power_w(100e3) * 1e6, 1),
+         "energy_per_frame_nJ": round(C.energy_per_frame_j(cyc, 100e3) * 1e9, 1)},
+        {"point": "peak 500 MHz", "power_mW": round(C.power_w(500e6) * 1e3, 1),
+         "energy_per_frame_nJ": round(C.energy_per_frame_j(cyc, 500e6) * 1e9, 1)},
+        {"point": "efficiency", "dense_equiv_TOPS_per_W":
+            round(C.tops_per_watt(PRUNED, 2, sparsity=sp), 2)},
+    ]
+    return rows, {"paper": "71.2 uW / 35.5 mW / 63.5 nJ/frame / 28.41 TOPS/W"}

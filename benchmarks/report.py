@@ -1,0 +1,55 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from
+results/dryrun_v2 (the 40-cell baseline) + results/hillclimb."""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks import roofline  # noqa: E402
+
+BASE = Path(__file__).resolve().parents[1] / "results"
+
+
+def dryrun_table(mesh: str) -> str:
+    rows = []
+    for f in sorted((BASE / "dryrun_v2").glob(f"*__{mesh}.json")):
+        rec = json.loads(f.read_text())
+        arch, shape = rec["arch"], rec["shape"]
+        if rec.get("skipped"):
+            rows.append(f"| {arch} | {shape} | SKIP | — | — | — | — |")
+            continue
+        if not rec.get("ok"):
+            rows.append(f"| {arch} | {shape} | FAIL | — | — | — | — |")
+            continue
+        ma = rec.get("memory_analysis", {})
+        args_gb = ma.get("argument_size_in_bytes", 0) / 1e9
+        t = rec["tripaware"]
+        coll = t["collective_total"] / 1e9
+        rows.append(
+            f"| {arch} | {shape} | ok | {rec.get('compile_s','—')} | "
+            f"{args_gb:.2f} | {t['flops']:.2e} | {coll:.1f} |")
+    header = ("| arch | shape | status | compile s | state GB/dev | "
+              "HLO FLOPs/dev | collective GB/dev |\n|---|---|---|---|---|---|---|")
+    return header + "\n" + "\n".join(rows)
+
+
+def main():
+    print("## Dry-run single-pod (16x16 = 256 chips)\n")
+    print(dryrun_table("pod"))
+    print("\n## Dry-run multi-pod (2x16x16 = 512 chips)\n")
+    print(dryrun_table("multipod"))
+    print("\n## Roofline (single-pod, baseline)\n")
+    import benchmarks.roofline as R
+    # point roofline at the baseline snapshot
+    R.RESULTS = BASE / "dryrun_v2"
+    rows = R.table("pod")
+    print(R.markdown(rows))
+
+
+if __name__ == "__main__":
+    main()

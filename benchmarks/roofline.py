@@ -1,0 +1,109 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell, from results/dryrun/*.json:
+  compute term    = HLO_FLOPs / (chips * 197 TFLOP/s)
+  memory term     = HLO_bytes / (chips * 819 GB/s)
+  collective term = collective_bytes / (chips * 50 GB/s)
+(tripaware numbers are per-device; global = x chips, so the per-chip time is
+the per-device quantity over the per-chip rate.)
+
+Also: dominant term, MODEL_FLOPS / HLO_FLOPs (useful-compute fraction),
+roofline fraction = ideal compute time / dominant term, and an action note.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+from repro.analysis.model_flops import model_flops
+from repro.configs.base import shape_by_name
+
+PEAK_FLOPS = 197e12  # bf16 / chip (TPU v5e)
+HBM_BW = 819e9  # B/s / chip
+LINK_BW = 50e9  # B/s / link
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun_v2"
+
+_ACTIONS = {
+    "compute": "cut redundant compute: remat policy / dispatch einsum / head-sharding so per-chip FLOPs approach MODEL_FLOPS/chips",
+    "memory": "cut HBM traffic: int4/bf16 weights, fuse elementwise chains, larger effective batch per weight fetch (the paper's weight-reuse insight)",
+    "collective": "cut bytes on the wire: reduce-scatter instead of all-gather, overlap collectives with compute, int8 gradient compression",
+}
+
+
+def load_cells(mesh: str = "pod") -> list[dict]:
+    rows = []
+    for f in sorted(RESULTS.glob(f"*__{mesh}.json")):
+        rec = json.loads(f.read_text())
+        rows.append(rec)
+    return rows
+
+
+def roofline_row(rec: dict) -> dict | None:
+    if rec.get("skipped"):
+        return {"arch": rec["arch"], "shape": rec["shape"], "skipped": True,
+                "reason": rec.get("reason", "")}
+    if not rec.get("ok"):
+        return {"arch": rec["arch"], "shape": rec["shape"], "error": rec.get("error")}
+    t = rec["tripaware"]
+    chips = rec["num_devices"]
+    compute_s = t["flops"] / PEAK_FLOPS
+    memory_s = t["hbm_bytes"] / HBM_BW
+    coll_s = t["collective_total"] / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], shape_by_name(rec["shape"]))
+    useful = mf / (t["flops"] * chips) if t["flops"] else 0.0
+    ideal_s = mf / chips / PEAK_FLOPS
+    frac = ideal_s / max(terms.values()) if max(terms.values()) else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "chips": chips,
+        "compute_s": compute_s, "memory_s": memory_s, "collective_s": coll_s,
+        "dominant": dominant, "model_flops": mf,
+        "useful_fraction": useful, "roofline_fraction": frac,
+        "action": _ACTIONS[dominant],
+    }
+
+
+def table(mesh: str = "pod") -> list[dict]:
+    return [r for r in (roofline_row(rec) for rec in load_cells(mesh)) if r]
+
+
+def markdown(rows: list[dict]) -> str:
+    out = ["| arch | shape | compute s | memory s | collective s | dominant | MODEL/HLO | roofline frac |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("skipped"):
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | SKIP | — | — |")
+            continue
+        if r.get("error"):
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | ERROR | — | — |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | {r['dominant']} | "
+            f"{r['useful_fraction']:.3f} | {r['roofline_fraction']:.3f} |")
+    return "\n".join(out)
+
+
+def main():
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "pod"
+    rows = table(mesh)
+    print(markdown(rows))
+    ok = [r for r in rows if "roofline_fraction" in r]
+    if ok:
+        worst = sorted(ok, key=lambda r: r["roofline_fraction"])[:5]
+        print("\nworst roofline fractions:")
+        for r in worst:
+            print(f"  {r['arch']} {r['shape']}: {r['roofline_fraction']:.4f} "
+                  f"(dominant={r['dominant']}) -> {r['action']}")
+        coll = sorted(ok, key=lambda r: -r["collective_s"])[:3]
+        print("most collective-bound:")
+        for r in coll:
+            print(f"  {r['arch']} {r['shape']}: coll={r['collective_s']:.3e}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+from repro.configs.base import (  # noqa: F401
+    LM_SHAPES,
+    LONG_CONTEXT_SKIP,
+    MLAConfig,
+    MoEConfig,
+    ModelConfig,
+    SSMConfig,
+    ShapeConfig,
+    cell_is_runnable,
+    shape_by_name,
+)
+from repro.configs.archs import ALL_ARCHS  # noqa: F401

@@ -1,0 +1,2 @@
+"""--arch deepseek_v3_671b (see configs/archs.py for the full definition)."""
+from repro.configs.archs import DEEPSEEK_V3_671B as CONFIG  # noqa: F401

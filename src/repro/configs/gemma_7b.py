@@ -1,0 +1,2 @@
+"""--arch gemma_7b (see configs/archs.py for the full definition)."""
+from repro.configs.archs import GEMMA_7B as CONFIG  # noqa: F401

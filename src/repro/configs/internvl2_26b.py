@@ -1,0 +1,2 @@
+"""--arch internvl2_26b (see configs/archs.py for the full definition)."""
+from repro.configs.archs import INTERNVL2_26B as CONFIG  # noqa: F401

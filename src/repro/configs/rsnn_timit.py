@@ -1,0 +1,11 @@
+"""The paper's own architecture: RSNN for TIMIT phoneme recognition.
+
+Baseline (Table I): hidden 256, FC 1920, 2 time steps. The pruned variant
+(hidden 128 + 40% unstructured FC pruning + 4-bit QAT) is produced by the
+compression pipeline (repro.core.compression).
+"""
+from repro.core.rsnn import RSNNConfig
+
+BASELINE = RSNNConfig(input_dim=40, hidden_dim=256, fc_dim=1920, num_ts=2)
+PRUNED = RSNNConfig(input_dim=40, hidden_dim=128, fc_dim=1920, num_ts=2)
+CONFIG = PRUNED

@@ -1,0 +1,2 @@
+"""--arch whisper_base (see configs/archs.py for the full definition)."""
+from repro.configs.archs import WHISPER_BASE as CONFIG  # noqa: F401

@@ -1,0 +1,2 @@
+"""--arch xlstm_350m (see configs/archs.py for the full definition)."""
+from repro.configs.archs import XLSTM_350M as CONFIG  # noqa: F401

@@ -1,0 +1,2 @@
+"""--arch yi_6b (see configs/archs.py for the full definition)."""
+from repro.configs.archs import YI_6B as CONFIG  # noqa: F401

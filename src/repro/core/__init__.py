@@ -1,0 +1,14 @@
+# The paper's primary contribution: the low-time-step recurrent spiking
+# network, its LIF dynamics, the parallel-time-step / merged-spike dataflow
+# semantics, the compression stack, and the analytical hardware accounting.
+from repro.core.rsnn import (  # noqa: F401
+    RSNNConfig,
+    RSNNState,
+    forward,
+    frame_step,
+    init_params,
+    init_state,
+    loss_fn,
+)
+from repro.core.lif import LIFParams, LIFState, init_lif, lif_step, spike_fn  # noqa: F401
+from repro.core import complexity, spike_ops, temporal  # noqa: F401

@@ -1,0 +1,20 @@
+from repro.core.compression.pruning import (  # noqa: F401
+    magnitude_prune_mask,
+    structured_prune_config,
+    apply_masks,
+    sparsity_of,
+)
+from repro.core.compression.quantization import (  # noqa: F401
+    fake_quant,
+    quantize_tree,
+    pack_int4,
+    unpack_int4,
+    QuantSpec,
+)
+from repro.core.compression.compress import (  # noqa: F401
+    CompressionConfig,
+    CompressionState,
+    init_compression,
+    materializer,
+    compressed_size_bytes,
+)

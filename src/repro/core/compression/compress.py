@@ -1,0 +1,76 @@
+"""Compression pipeline orchestration (paper §II-D3, Fig. 12).
+
+The paper's flow: structured pruning (256 -> 128, train from scratch)
+-> unstructured magnitude pruning of the FC (40%) -> 4-bit QAT. This module
+ties the pieces into a `materializer` the training loss applies to weights
+each step, and accounts compressed storage (Fig. 12's 2.79 MB -> 0.1 MB).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+
+from repro.core.compression import pruning, quantization
+from repro.core.compression.quantization import QuantSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    fc_prune_frac: float = 0.0  # unstructured pruning on the FC layer
+    prune_names: tuple[str, ...] = ("fc_w",)
+    weight_bits: int | None = None  # None = float weights; 4 = paper setting
+    quant_names: tuple[str, ...] = ("l0_wx", "l0_wh", "l1_wx", "l1_wh", "fc_w")
+    quant_granularity: str = "per_channel"
+
+    @property
+    def quant_spec(self) -> QuantSpec | None:
+        if self.weight_bits is None:
+            return None
+        return QuantSpec(bits=self.weight_bits, granularity=self.quant_granularity)
+
+
+class CompressionState(NamedTuple):
+    masks: dict  # name -> {0,1} mask
+
+
+def init_compression(params: dict, ccfg: CompressionConfig) -> CompressionState:
+    masks = {}
+    if ccfg.fc_prune_frac > 0.0:
+        for n in ccfg.prune_names:
+            masks[n] = pruning.magnitude_prune_mask(params[n], ccfg.fc_prune_frac)
+    return CompressionState(masks=masks)
+
+
+def materializer(ccfg: CompressionConfig, cstate: CompressionState):
+    """Returns params -> effective-params (masks then fake-quant), jit-safe."""
+
+    def mat(params: dict) -> dict:
+        p = pruning.apply_masks(params, cstate.masks)
+        spec = ccfg.quant_spec
+        if spec is not None:
+            p = quantization.quantize_tree(p, spec, ccfg.quant_names)
+        return p
+
+    return mat
+
+
+def compressed_size_bytes(params: dict, ccfg: CompressionConfig,
+                          cstate: CompressionState) -> float:
+    """Deployed weight storage: nonzero weights at weight_bits each.
+
+    (Index overhead is zero in the paper's design: zero-skipping uses input
+    broadcasting, not compressed-sparse weight storage.)
+    """
+    bits = ccfg.weight_bits or 32
+    total_bits = 0.0
+    for name, w in params.items():
+        if not isinstance(w, jax.Array) or w.ndim < 2:
+            continue  # LIF params etc. are negligible / kept 12-bit on-chip
+        nnz = w.size
+        if name in cstate.masks:
+            nnz = float(cstate.masks[name].sum())
+        total_bits += nnz * bits
+    return total_bits / 8.0

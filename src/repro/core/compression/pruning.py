@@ -1,0 +1,59 @@
+"""Mixed-level pruning (paper §II-D3).
+
+Structured pruning follows the *predefined* scheme of [24]: shrink the
+channel width (256 -> 128) directly and train from scratch — so it is a
+config transform, not a mask. Unstructured pruning follows [25]: global
+magnitude pruning of the FC weights (paper removes 40% of FC), realised as
+binary masks applied before the forward pass.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+def structured_prune_config(cfg, hidden_dim: int):
+    """Predefined structured pruning: same architecture, narrower channels.
+
+    The FC *output* dimension is kept (decoder interface, paper §II-D3).
+    The resulting config is trained from scratch per [24].
+    """
+    return dataclasses.replace(cfg, hidden_dim=hidden_dim)
+
+
+def magnitude_prune_mask(w: jax.Array, prune_frac: float) -> jax.Array:
+    """Keep the (1-prune_frac) largest-|w| entries. Returns a {0,1} mask."""
+    if prune_frac <= 0.0:
+        return jnp.ones_like(w)
+    k = int(round(w.size * (1.0 - prune_frac)))
+    k = max(k, 1)
+    thresh = jnp.sort(jnp.abs(w).reshape(-1))[-k]
+    return (jnp.abs(w) >= thresh).astype(w.dtype)
+
+
+def apply_masks(params: dict, masks: dict) -> dict:
+    """Elementwise-apply masks to matching leaves; other leaves pass through."""
+    out = dict(params)
+    for name, m in masks.items():
+        out[name] = params[name] * m
+    return out
+
+
+def sparsity_of(masks: dict) -> dict:
+    return {k: float(1.0 - jnp.mean(m)) for k, m in masks.items()}
+
+
+def nm_prune_mask(w: jax.Array, n: int = 2, m: int = 4) -> jax.Array:
+    """N:M structured-sparse mask along the input dim (beyond-paper option;
+    TPU/accelerator-friendly regular sparsity). Keeps the n largest-|w| of
+    every m consecutive rows."""
+    rows, cols = w.shape
+    assert rows % m == 0, f"rows {rows} not divisible by m={m}"
+    g = jnp.abs(w).reshape(rows // m, m, cols)
+    # rank within each group of m; keep top-n
+    order = jnp.argsort(jnp.argsort(-g, axis=1), axis=1)
+    mask = (order < n).astype(w.dtype)
+    return mask.reshape(rows, cols)

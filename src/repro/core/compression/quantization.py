@@ -1,0 +1,77 @@
+"""Quantization-aware training + int4 packing (paper §II-D3, ref [26]).
+
+Weights are quantized to a symmetric fixed-point grid (4-bit in the paper)
+with per-tensor or per-channel scales, using straight-through estimators
+during QAT. ``pack_int4``/``unpack_int4`` produce the 2-per-byte layout the
+Pallas int4 matmul kernel consumes (kernels/int4_matmul.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    bits: int = 4
+    granularity: Literal["per_tensor", "per_channel"] = "per_channel"
+    # membrane/accumulator width in the paper's (m, n) sweep is 12 bits;
+    # exposed for the hardware-faithful path.
+    accum_bits: int = 12
+
+
+def _scale_for(w: jax.Array, spec: QuantSpec) -> jax.Array:
+    qmax = 2.0 ** (spec.bits - 1) - 1
+    if spec.granularity == "per_channel":
+        amax = jnp.max(jnp.abs(w), axis=0, keepdims=True)
+    else:
+        amax = jnp.max(jnp.abs(w))
+    return jnp.maximum(amax, 1e-8) / qmax
+
+
+def fake_quant(w: jax.Array, spec: QuantSpec = QuantSpec()) -> jax.Array:
+    """Symmetric fake-quant with straight-through gradient."""
+    scale = jax.lax.stop_gradient(_scale_for(w, spec))
+    qmax = 2.0 ** (spec.bits - 1) - 1
+    q = jnp.clip(jnp.round(w / scale), -qmax - 1, qmax) * scale
+    return w + jax.lax.stop_gradient(q - w)
+
+
+def quantize_tree(params: dict, spec: QuantSpec, names: tuple[str, ...]) -> dict:
+    out = dict(params)
+    for n in names:
+        out[n] = fake_quant(params[n], spec)
+    return out
+
+
+def quantize_to_int(w: jax.Array, spec: QuantSpec = QuantSpec()
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Real integer quantization for deployment: returns (q int8-held, scale)."""
+    scale = _scale_for(w, spec)
+    qmax = 2.0 ** (spec.bits - 1) - 1
+    q = jnp.clip(jnp.round(w / scale), -qmax - 1, qmax).astype(jnp.int8)
+    return q, scale
+
+
+def pack_int4(q: jax.Array) -> jax.Array:
+    """Pack int4 values (held in int8, range [-8,7]) two-per-byte along the
+    leading axis. Shape (2k, n) int8 -> (k, n) int8 with low nibble = even row."""
+    assert q.shape[0] % 2 == 0, "leading dim must be even to pack"
+    lo = q[0::2] & 0xF
+    hi = (q[1::2] & 0xF) << 4
+    return (lo | hi).astype(jnp.int8)
+
+
+def unpack_int4(packed: jax.Array) -> jax.Array:
+    """Inverse of pack_int4: (k, n) int8 -> (2k, n) int8 with sign extension."""
+    lo = (packed & 0xF).astype(jnp.int8)
+    hi = ((packed >> 4) & 0xF).astype(jnp.int8)
+    # sign-extend 4-bit values held in int8
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    out = jnp.stack([lo, hi], axis=1)  # (k, 2, n)
+    return out.reshape(packed.shape[0] * 2, *packed.shape[1:])

@@ -1,0 +1,154 @@
+"""Leaky Integrate-and-Fire neuron (paper Eq. 2-3, Fig. 6).
+
+Implements the LIF dynamics used by the RSNN accelerator:
+
+    U[t][ts] = stimulus + beta * U[t][ts-1] * (1 - h[t][ts-1])
+    h[t][ts] = 1  if U[t][ts] >= V_th else 0
+
+with *learnable* threshold V_th and decay beta (DIET-SNN [21]) and a
+surrogate gradient for the non-differentiable spike in backprop [16], [20].
+
+Hardware-faithful inference rounds beta and V_th to (approximate) powers of
+two, matching the shift-based LIF circuit in the paper's Fig. 6.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class LIFParams(NamedTuple):
+    """Per-neuron learnable LIF parameters (unconstrained space)."""
+
+    raw_beta: jax.Array  # beta = sigmoid(raw_beta) in (0, 1)
+    raw_vth: jax.Array  # vth  = softplus(raw_vth) > 0
+
+
+class LIFState(NamedTuple):
+    """Carried LIF state: membrane potential and previous spike."""
+
+    u: jax.Array
+    spike: jax.Array
+
+
+def init_lif(num_neurons: int, beta_init: float = 0.9, vth_init: float = 1.0,
+             dtype=jnp.float32) -> LIFParams:
+    """Initialise learnable LIF parameters at the requested beta/vth."""
+    raw_beta = jnp.full((num_neurons,), _logit(beta_init), dtype=dtype)
+    raw_vth = jnp.full((num_neurons,), _softplus_inv(vth_init), dtype=dtype)
+    return LIFParams(raw_beta=raw_beta, raw_vth=raw_vth)
+
+
+def init_lif_state(batch: int, num_neurons: int, dtype=jnp.float32) -> LIFState:
+    return LIFState(u=jnp.zeros((batch, num_neurons), dtype),
+                    spike=jnp.zeros((batch, num_neurons), dtype))
+
+
+def _logit(p: float) -> float:
+    import math
+
+    return math.log(p / (1.0 - p))
+
+
+def _softplus_inv(y: float) -> float:
+    import math
+
+    return math.log(math.expm1(y))
+
+
+def beta_of(params: LIFParams) -> jax.Array:
+    return jax.nn.sigmoid(params.raw_beta)
+
+
+def vth_of(params: LIFParams) -> jax.Array:
+    return jax.nn.softplus(params.raw_vth)
+
+
+# ---------------------------------------------------------------------------
+# Surrogate-gradient spike
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def spike_fn(u: jax.Array, vth: jax.Array, slope: float = 25.0) -> jax.Array:
+    """Heaviside spike with fast-sigmoid surrogate gradient.
+
+    Forward: h = 1[u >= vth].  Backward: dh/du ~= 1 / (1 + slope*|u-vth|)^2
+    (snnTorch-style fast sigmoid), dh/dvth = -dh/du.
+    """
+    return (u >= vth).astype(u.dtype)
+
+
+def _spike_fwd(u, vth, slope):
+    return spike_fn(u, vth, slope), (u, vth)
+
+
+def _spike_bwd(slope, res, g):
+    u, vth = res
+    x = u - vth
+    surr = 1.0 / jnp.square(1.0 + slope * jnp.abs(x))
+    du = g * surr
+    # vth broadcasts over batch; reduce the gradient back to vth's shape.
+    dvth = -du
+    if dvth.ndim > vth.ndim:
+        axes = tuple(range(dvth.ndim - vth.ndim))
+        dvth = dvth.sum(axes)
+    return du, dvth
+
+
+spike_fn.defvjp(_spike_fwd, _spike_bwd)
+
+
+# ---------------------------------------------------------------------------
+# LIF step
+# ---------------------------------------------------------------------------
+
+
+def lif_step(params: LIFParams, state: LIFState, stimulus: jax.Array,
+             slope: float = 25.0, hw_rounded: bool = False) -> tuple[LIFState, jax.Array]:
+    """One LIF update (Eq. 2-3): returns (new_state, spike).
+
+    ``hw_rounded=True`` uses power-of-two-rounded beta / vth, matching the
+    shift-add inference hardware (paper §III-C). Rounding uses
+    straight-through estimators so it is also usable late in QAT.
+    """
+    beta = beta_of(params)
+    vth = vth_of(params)
+    if hw_rounded:
+        beta = round_beta_pow2(beta)
+        vth = round_vth_pow2(vth)
+    # Leak of the previous membrane, reset-by-subtraction-to-zero on spike
+    # (Fig. 6 multiplexer resets U when the previous spike fired).
+    u = stimulus + beta * state.u * (1.0 - state.spike)
+    h = spike_fn(u, vth, slope)
+    return LIFState(u=u, spike=h), h
+
+
+# ---------------------------------------------------------------------------
+# Power-of-two rounding (hardware inference mode)
+# ---------------------------------------------------------------------------
+
+
+def round_beta_pow2(beta: jax.Array, max_shift: int = 5) -> jax.Array:
+    """Round beta in (0,1) to the nearest shift-friendly value.
+
+    Candidates are {2^-k} U {1 - 2^-k}, k=1..max_shift, both implementable
+    as a single shift (+ subtract) in the LIF datapath. Straight-through
+    gradient.
+    """
+    ks = jnp.arange(1, max_shift + 1, dtype=beta.dtype)
+    cands = jnp.concatenate([2.0 ** -ks, 1.0 - 2.0 ** -ks])
+    idx = jnp.argmin(jnp.abs(beta[..., None] - cands), axis=-1)
+    rounded = cands[idx]
+    return beta + jax.lax.stop_gradient(rounded - beta)
+
+
+def round_vth_pow2(vth: jax.Array, min_exp: int = -4, max_exp: int = 4) -> jax.Array:
+    """Round vth to the nearest power of two in [2^min_exp, 2^max_exp]."""
+    exps = jnp.clip(jnp.round(jnp.log2(jnp.maximum(vth, 1e-8))), min_exp, max_exp)
+    rounded = 2.0 ** exps
+    return vth + jax.lax.stop_gradient(rounded - vth)

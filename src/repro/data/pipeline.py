@@ -1,0 +1,59 @@
+"""Host data pipeline: background prefetch + device placement.
+
+Production shape: each host generates/reads its local batch shard, a
+prefetch thread keeps `depth` batches in flight (overlapping host data work
+with device compute), and arrays are placed with the trainer's input
+shardings. Streams are seekable by step, so resume-after-failure replays
+the exact batch sequence.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator
+
+import jax
+
+
+class PrefetchIterator:
+    def __init__(self, make_batch: Callable[[int], dict], start_step: int = 0,
+                 depth: int = 2, sharding=None):
+        self._make = make_batch
+        self._sharding = sharding
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._step = start_step
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        step = self._step
+        while not self._stop.is_set():
+            batch = self._make(step)
+            if self._sharding is not None:
+                batch = jax.tree.map(
+                    lambda x, s: jax.device_put(x, s), batch, self._sharding)
+            else:
+                batch = jax.tree.map(jax.device_put, batch)
+            while not self._stop.is_set():
+                try:
+                    self._q.put((step, batch), timeout=0.5)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        return self._q.get()
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass

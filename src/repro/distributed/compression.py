@@ -1,0 +1,62 @@
+"""Gradient compression: int8 quantization with error feedback.
+
+The int8 codec (per-leaf scale) cuts gradient-exchange bytes 4x vs fp32 /
+2x vs bf16. Error feedback keeps the quantization noise from biasing
+convergence: the residual (g - dq(q(g))) is carried in the train state and
+added back before the next compression (1-bit-Adam-style).
+
+`compressed_psum` is the shard_map building block: each shard quantizes its
+local gradient, the int8 payload crosses the interconnect, and the sum is
+reconstructed in fp32 on arrival — tested under a multi-device subprocess.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_leaf(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_leaf(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_feedback(params) -> dict:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_grads(grads, residual):
+    """Returns (quantized tree {q, scale}, new residual). Apply BEFORE the
+    gradient exchange; `decompress_grads` after."""
+    def one(g, r):
+        g = g.astype(jnp.float32) + r
+        q, s = quantize_leaf(g)
+        return {"q": q, "scale": s}, g - dequantize_leaf(q, s)
+
+    pairs = jax.tree.map(one, grads, residual)
+    comp = jax.tree.map(lambda t: t[0], pairs,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    new_res = jax.tree.map(lambda t: t[1], pairs,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    return comp, new_res
+
+
+def decompress_grads(comp):
+    is_q = lambda x: isinstance(x, dict) and set(x) == {"q", "scale"}
+    return jax.tree.map(lambda t: dequantize_leaf(t["q"], t["scale"]), comp,
+                        is_leaf=is_q)
+
+
+def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
+    """int8 all-gather + local fp32 sum: 4x less interconnect traffic than a
+    fp32 ring all-reduce at the cost of an fp32 reduction on arrival.
+    Call inside shard_map."""
+    q, scale = quantize_leaf(x)
+    qs = jax.lax.all_gather(q, axis_name)  # (n, ...) int8 payload
+    ss = jax.lax.all_gather(scale, axis_name)
+    return jnp.tensordot(ss, qs.astype(jnp.float32), axes=([0], [0]))

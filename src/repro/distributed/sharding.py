@@ -1,0 +1,270 @@
+"""Sharding rules: pytree-path-driven PartitionSpec inference.
+
+Strategy (DESIGN.md §5):
+  * batch shards over the data axes ('pod','data') when divisible;
+  * TP ('model'): attention heads / FFN hidden / vocab / experts, by leaf
+    name, only when the dim divides the axis;
+  * FSDP ('data'): the non-TP large dim of every >=2D parameter (ZeRO-3 —
+    XLA inserts the all-gathers);
+  * stacked-layer prefixes ('layers', 'groups', 'tail', 'enc/dec_layers')
+    get a leading None;
+  * caches/recurrent state: batch dim over data axes; when B=1 (long_500k)
+    the sequence dim of KV caches shards over 'data' (context parallelism)
+    and head/state dims over 'model'.
+
+Every rule degrades to replication when a dim does not divide, so any
+(arch x shape x mesh) combination lowers.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+STACKED = re.compile(r"\['(layers|groups|tail|dec_layers|enc_layers|dense_prefix)'\]")
+
+# leaf name -> (tp_dim, fsdp_dim) counted from the END of the (unstacked) shape
+_COL_PARALLEL = {"w_q", "w_k", "w_v", "w_gate", "w_up", "w_uq", "w_uk", "w_uv",
+                 "w_ff_gate", "w_ff_up", "w_in", "w_if", "w_o_gate",
+                 # RSNN layers: hidden/FC output dims shard over 'model'
+                 "l0_wx", "l0_wh", "l1_wx", "l1_wh", "fc_w"}
+_ROW_PARALLEL = {"w_o", "w_down", "w_ff_down", "w_out"}
+_REPLICATED = {"router", "conv_w", "conv_b", "a_log", "dt_bias", "d_skip",
+               "b_if", "b_gates", "vth", "scale", "bias", "dec_pos",
+               "q_norm", "kv_norm", "raw_beta", "raw_vth", "b_up", "b_down",
+               "w_kr", "w_dq", "w_dkv", "r_gates", "w_gates"}
+
+
+def _leaf_name(pathstr: str) -> str:
+    m = re.findall(r"\['([^']+)'\]|\.(\w+)$", pathstr)
+    last = m[-1] if m else ("", "")
+    return last[0] or last[1]
+
+
+def _div(n: int, mesh, axis: str) -> bool:
+    return axis in mesh.axis_names and n % mesh.shape[axis] == 0 and n >= mesh.shape[axis]
+
+
+def _data_axes_for(n: int, mesh) -> Any:
+    """Largest prefix of ('pod','data') that divides n."""
+    axes = []
+    size = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            size *= mesh.shape[a]
+            axes.append(a)
+    if axes and n % size == 0 and n > 0:
+        return tuple(axes) if len(axes) > 1 else axes[0]
+    # try 'data' alone
+    if _div(n, mesh, "data"):
+        return "data"
+    return None
+
+
+def param_spec(pathstr: str, shape: tuple[int, ...], mesh) -> P:
+    name = _leaf_name(pathstr)
+    nd = len(shape)
+    n_stack = len(STACKED.findall(pathstr))
+    spec = [None] * nd
+    if nd - n_stack < 2 or name in _REPLICATED:
+        # 1-D / scalar / explicitly replicated params. Still FSDP-shard big
+        # replicated 2D+ leaves (e.g. mamba w_in/w_gates) over 'data'.
+        if nd - n_stack >= 2 and name not in {"router", "dec_pos", "conv_w"}:
+            if _div(shape[-2], mesh, "data"):
+                spec[-2] = "data"
+            if name in _COL_PARALLEL and _div(shape[-1], mesh, "model"):
+                spec[-1] = "model"
+        return P(*spec)
+
+    is_expert = "['moe']" in pathstr and name in ("w_gate", "w_up", "w_down")
+    if is_expert and nd - n_stack == 3:
+        e_dim = nd - 3
+        if _div(shape[e_dim], mesh, "model"):
+            spec[e_dim] = "model"  # expert parallelism
+        fsdp_dim = nd - 2 if name in ("w_gate", "w_up") else nd - 1
+        if _div(shape[fsdp_dim], mesh, "data"):
+            spec[fsdp_dim] = "data"
+        return P(*spec)
+
+    if name == "tok":  # (V, D): vocab over model, D over data
+        if _div(shape[-2], mesh, "model"):
+            spec[-2] = "model"
+        if _div(shape[-1], mesh, "data"):
+            spec[-1] = "data"
+        return P(*spec)
+    if name == "unembed":  # (D, V)
+        if _div(shape[-1], mesh, "model"):
+            spec[-1] = "model"
+        if _div(shape[-2], mesh, "data"):
+            spec[-2] = "data"
+        return P(*spec)
+
+    if name in _COL_PARALLEL:
+        tp_dim, fsdp_dim = nd - 1, nd - 2
+    elif name in _ROW_PARALLEL:
+        tp_dim, fsdp_dim = nd - 2, nd - 1
+    else:  # unknown 2D leaf: fsdp the bigger dim
+        tp_dim, fsdp_dim = None, (nd - 2 if shape[-2] >= shape[-1] else nd - 1)
+    if tp_dim is not None and _div(shape[tp_dim], mesh, "model"):
+        spec[tp_dim] = "model"
+    if _div(shape[fsdp_dim], mesh, "data"):
+        spec[fsdp_dim] = "data"
+    return P(*spec)
+
+
+# --- caches / recurrent state ------------------------------------------------
+
+_CACHE_SEQ_DIM = {"k": 1, "v": 1, "kv_latent": 1, "k_rope": 1, "enc_out": 1}
+_CACHE_HEAD_DIM = {"k": 2, "v": 2}
+
+
+def cache_spec(pathstr: str, shape: tuple[int, ...], mesh, batch: int) -> P:
+    name = _leaf_name(pathstr) or pathstr.rsplit(".", 1)[-1]
+    nd = len(shape)
+    # detect stacked leading dims: cache leaves have batch as first non-stack dim
+    batch_dim = next((i for i, s in enumerate(shape) if s == batch), None)
+    spec: list[Any] = [None] * nd
+    dax = _data_axes_for(batch, mesh)
+    if batch_dim is not None and dax is not None and batch > 1:
+        spec[batch_dim] = dax
+        # shard a head/state dim over model if possible
+        for i in range(nd - 1, batch_dim, -1):
+            if _div(shape[i], mesh, "model"):
+                spec[i] = "model"
+                break
+        return P(*spec)
+    # B too small: context-parallel — shard the longest dim over 'data',
+    # a later dim over 'model'
+    order = sorted(range(nd), key=lambda i: -shape[i])
+    for i in order:
+        if _div(shape[i], mesh, "data"):
+            spec[i] = "data"
+            break
+    for i in order:
+        if spec[i] is None and _div(shape[i], mesh, "model"):
+            spec[i] = "model"
+            break
+    return P(*spec)
+
+
+# --- tree-level helpers -------------------------------------------------------
+
+
+def tree_param_specs(tree, mesh):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    specs = [param_spec(jax.tree_util.keystr(p), l.shape, mesh) for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def tree_cache_specs(tree, mesh, batch: int):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    specs = [cache_spec(jax.tree_util.keystr(p), l.shape, mesh, batch) for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_specs(batch_tree, mesh):
+    def spec(leaf):
+        dax = _data_axes_for(leaf.shape[0], mesh)
+        return P(dax, *([None] * (leaf.ndim - 1)))
+    return jax.tree.map(spec, batch_tree)
+
+
+_ACTIVE_AXES: dict[str, int] = {}
+
+
+def set_activation_axes(mesh) -> None:
+    """Record mesh axis names/sizes so model code can place activation
+    sharding constraints (call before tracing train/serve steps)."""
+    global _ACTIVE_AXES
+    if mesh is None:
+        _ACTIVE_AXES = {}
+    else:
+        _ACTIVE_AXES = {a: int(mesh.shape[a]) for a in mesh.axis_names}
+
+
+def axis_size(axis: str) -> int:
+    return _ACTIVE_AXES.get(axis, 1)
+
+
+def _batch_axes(n: int):
+    """Largest prefix of ('pod','data') whose product divides n."""
+    axes = [a for a in ("pod", "data") if a in _ACTIVE_AXES]
+    size = 1
+    for a in axes:
+        size *= _ACTIVE_AXES[a]
+    if axes and n % size == 0 and n >= size:
+        return tuple(axes) if len(axes) > 1 else axes[0]
+    if "data" in _ACTIVE_AXES and n % _ACTIVE_AXES["data"] == 0 and n >= _ACTIVE_AXES["data"]:
+        return "data"
+    return None
+
+
+def constrain(x, spec: P):
+    if not _ACTIVE_AXES:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain_batch(x, model_dim: int | None = None):
+    """Pin dim0 to the data axes (no-op if indivisible, e.g. B=1 decode);
+    optionally pin `model_dim` to 'model' when divisible."""
+    if not _ACTIVE_AXES:
+        return x
+    spec = [None] * x.ndim
+    spec[0] = _batch_axes(x.shape[0])
+    if (model_dim is not None and "model" in _ACTIVE_AXES
+            and x.shape[model_dim] % _ACTIVE_AXES["model"] == 0
+            and x.shape[model_dim] >= _ACTIVE_AXES["model"]):
+        spec[model_dim] = "model"
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def constrain_dim(x, dim: int, axis: str):
+    if axis not in _ACTIVE_AXES or x.shape[dim] % _ACTIVE_AXES[axis] != 0 \
+            or x.shape[dim] < _ACTIVE_AXES[axis]:
+        return x
+    spec = [None] * x.ndim
+    spec[dim] = axis
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def constrain_last_dim(x, axis: str = "model"):
+    """with_sharding_constraint on the last dim (e.g. vocab-sharded logits),
+    no-op when no mesh registered or axis absent/non-divisible."""
+    if axis not in _ACTIVE_AXES:
+        return x
+    spec = [None] * x.ndim
+    spec[-1] = axis
+    spec[0] = _batch_axes(x.shape[0])
+    if x.shape[-1] % _ACTIVE_AXES[axis] != 0:
+        spec[-1] = None
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def shardable(n: int, axis: str) -> bool:
+    return axis in _ACTIVE_AXES and n % _ACTIVE_AXES[axis] == 0 and n >= _ACTIVE_AXES[axis]
+
+
+def constrain_dims(x, dims: dict[int, str]):
+    """Pin several dims at once; 'batch' maps to the data axes. Indivisible
+    requests degrade to None."""
+    if not _ACTIVE_AXES:
+        return x
+    spec: list = [None] * x.ndim
+    for dim, axis in dims.items():
+        if axis == "batch":
+            spec[dim] = _batch_axes(x.shape[dim])
+        elif shardable(x.shape[dim], axis):
+            spec[dim] = axis
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def with_shardings(shapes_tree, specs_tree, mesh):
+    """Attach NamedShardings to a ShapeDtypeStruct tree (dry-run inputs)."""
+    return jax.tree.map(
+        lambda s, spec: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                             sharding=NamedSharding(mesh, spec)),
+        shapes_tree, specs_tree)

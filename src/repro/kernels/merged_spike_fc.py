@@ -1,0 +1,54 @@
+"""Pallas TPU kernel: merged-spike FC layer with int4 weights.
+
+Fuses the paper's two FC tricks in one pass:
+  * merged spike (§II-D2): the TS spike trains are summed in VMEM before the
+    matmul — ONE weight pass serves all time steps (the ASIC's OR/AND
+    shift-add becomes a multiply by m in {0..TS}); FLOPs and weight traffic
+    both halve at TS=2 exactly like the paper's 50% cycle reduction;
+  * 4-bit weights (§II-D3): nibble-packed, dequantized in VMEM
+    (kernels/int4_matmul.py shares the codec).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.int4_matmul import _unpack_block
+
+
+def _merged_fc_kernel(s_ref, w_ref, scale_ref, o_ref):
+    # merge time steps in VMEM: one weight fetch for all TS
+    merged = s_ref[...].astype(jnp.float32).sum(axis=0)  # (bB, H)
+    w = _unpack_block(w_ref[...])  # (H, bN) f32
+    acc = jnp.dot(merged, w, preferred_element_type=jnp.float32)
+    o_ref[...] = (acc * scale_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_n", "interpret"))
+def merged_spike_fc(spikes_ts: jax.Array, packed: jax.Array, scale: jax.Array,
+                    *, block_b: int = 128, block_n: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """spikes_ts: (TS, B, H) binary; packed: (H//2, N) int4 pairs; scale (N,).
+    Returns (B, N) float32 logits summed over time steps."""
+    ts, b, h = spikes_ts.shape
+    h2, n = packed.shape
+    assert h == 2 * h2
+    bb, bn = min(block_b, b), min(block_n, n)
+    assert b % bb == 0 and n % bn == 0
+    grid = (b // bb, n // bn)
+    return pl.pallas_call(
+        _merged_fc_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ts, bb, h), lambda i, j: (0, i, 0)),
+            pl.BlockSpec((h2, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bb, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=interpret,
+    )(spikes_ts, packed, scale.reshape(1, n))

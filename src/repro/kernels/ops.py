@@ -1,0 +1,32 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode — the kernel
+body runs in Python, validating TPU semantics; on TPU they compile to Mosaic.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import int4_matmul as _i4
+from repro.kernels import merged_spike_fc as _mfc
+from repro.kernels import rsnn_cell as _cell
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def rsnn_cell(stim_base, s_prev, w, u0, h0, beta, vth, *, block_b: int = 128):
+    return _cell.rsnn_cell(stim_base, s_prev, w, u0, h0, beta, vth,
+                           block_b=block_b, interpret=_interpret())
+
+
+def int4_matmul(x, packed, scale, *, block_m=128, block_n=128, block_k=512):
+    return _i4.int4_matmul(x, packed, scale, block_m=block_m, block_n=block_n,
+                           block_k=block_k, interpret=_interpret())
+
+
+def merged_spike_fc(spikes_ts, packed, scale, *, block_b=128, block_n=128):
+    return _mfc.merged_spike_fc(spikes_ts, packed, scale, block_b=block_b,
+                                block_n=block_n, interpret=_interpret())

@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose ground truth).
+
+Semantics MUST match repro.core.lif / repro.core.spike_ops exactly — the
+kernels are drop-in fused implementations of those ops.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rsnn_cell_ref(stim_base: jax.Array, s_prev: jax.Array, w: jax.Array,
+                  u0: jax.Array, h0: jax.Array, beta: jax.Array,
+                  vth: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Fused recurrent-spiking-layer step over TS parallel time steps.
+
+    stim_base: (TS, B, H) feedforward stimulus (shared x@Wx is broadcast by
+               the caller); s_prev: (TS, B, H) previous-frame spikes;
+    w: (H, H) recurrent weights (fetched ONCE for all TS — the paper's
+               parallel-time-steps trick); u0/h0: (B, H) membrane chain carry.
+    Returns (spikes (TS, B, H), u_final (B, H)).
+    """
+    stim = stim_base + jnp.einsum("tbh,hk->tbk", s_prev, w)
+    u, h = u0, h0
+    spikes = []
+    for ts in range(stim.shape[0]):
+        u = stim[ts] + beta * u * (1.0 - h)
+        h = (u >= vth).astype(stim.dtype)
+        spikes.append(h)
+    return jnp.stack(spikes), u
+
+
+def unpack_int4_ref(packed: jax.Array) -> jax.Array:
+    """(K//2, N) int8 -> (K, N) int8 in [-8, 7] (low nibble = even row)."""
+    lo = (packed & 0xF).astype(jnp.int8)
+    hi = ((packed >> 4) & 0xF).astype(jnp.int8)
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    k2, n = packed.shape
+    return jnp.stack([lo, hi], axis=1).reshape(k2 * 2, n)
+
+
+def int4_matmul_ref(x: jax.Array, packed: jax.Array, scale: jax.Array
+                    ) -> jax.Array:
+    """x: (M, K) float; packed: (K//2, N) int4-pairs; scale: (N,) per-channel.
+    Returns (M, N) float32."""
+    w = unpack_int4_ref(packed).astype(jnp.float32) * scale.astype(jnp.float32)
+    return x.astype(jnp.float32) @ w
+
+
+def merged_spike_fc_ref(spikes_ts: jax.Array, packed: jax.Array,
+                        scale: jax.Array) -> jax.Array:
+    """Merged-spike FC (paper §II-D2) with int4 weights: one matmul for all
+    time steps. spikes_ts: (TS, B, H) binary."""
+    merged = spikes_ts.sum(axis=0)  # in {0..TS}
+    return int4_matmul_ref(merged, packed, scale)

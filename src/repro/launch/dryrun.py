@@ -1,0 +1,234 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this lowers the appropriate step function (train_step for
+train shapes, prefill_step / decode_step for inference shapes) against
+ShapeDtypeStruct inputs carrying NamedShardings, compiles it for the
+production mesh, and records memory analysis, HLO cost analysis, and the
+per-category collective byte counts parsed from the optimized HLO.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis import hlo as hlo_lib
+from repro.configs.base import LM_SHAPES, cell_is_runnable, shape_by_name
+from repro.distributed import sharding as shd
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_production_mesh
+from repro.models import registry
+from repro.training import optimizer as opt_lib
+from repro.training.optimizer import OptimizerConfig
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+                "s4": 0.5, "u4": 0.5}
+_SHAPE_RE = re.compile(r"\b(f64|f32|bf16|f16|s64|u64|s32|u32|s16|u16|s8|u8|pred|f8e4m3fn|f8e5m2|c64|c128|s4|u4)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum operand/output bytes of every collective in the optimized HLO.
+
+    Convention: per instruction we count max(output bytes, sum of operand
+    bytes found on the line) — a stable proxy for data moved (see
+    EXPERIMENTS.md §Roofline notes)."""
+    out = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.lstrip()
+        m = re.match(r"%?\S+ = .*? (all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)(-start|-done)?\(", ls)
+        if not m:
+            continue
+        if m.group(2) == "-done":
+            continue  # counted at -start
+        shapes = _SHAPE_RE.findall(ls)
+        if not shapes:
+            continue
+        lhs_end = ls.find(" = ")
+        rhs = ls[lhs_end:]
+        out_shapes = _SHAPE_RE.findall(ls[:lhs_end] + ls[lhs_end:ls.find("(")])
+        total = sum(_shape_bytes(d, s) for d, s in shapes)
+        outb = sum(_shape_bytes(d, s) for d, s in out_shapes)
+        op = m.group(1)
+        out[op] += max(outb, total - outb)
+        counts[op] += 1
+    return {"bytes": out, "counts": counts, "total_bytes": sum(out.values())}
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def _sds(shapes_tree, ns_tree):
+    return jax.tree.map(lambda s, n: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=n),
+                        shapes_tree, ns_tree)
+
+
+def input_specs(arch: str, shape_name: str, mesh, variant: str | None = None):
+    """ShapeDtypeStruct stand-ins (with shardings) for every input of the
+    cell's step function. Returns (step_fn, args tuple, donate_argnums,
+    out_shardings)."""
+    from repro.launch import variants as variants_lib
+
+    shape = shape_by_name(shape_name)
+    cfg = variants_lib.apply(registry.get_model(arch).cfg, variant)
+    api = registry.get_model(arch, cfg)
+    key = jax.random.PRNGKey(0)
+
+    params_shapes = jax.eval_shape(api.init, key)
+    pspecs = shd.tree_param_specs(params_shapes, mesh)
+    params_sds = _sds(params_shapes, _ns(mesh, pspecs))
+
+    bshapes = steps_lib.batch_shapes(cfg, shape)
+    bspecs = shd.batch_specs(bshapes, mesh)
+    batch_sds = _sds(bshapes, _ns(mesh, bspecs))
+    scalar_ns = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        ocfg = OptimizerConfig(name=cfg.optimizer)
+        opt_shapes = jax.eval_shape(lambda p: opt_lib.init_opt_state(p, ocfg),
+                                    params_shapes)
+        ospecs = opt_lib.state_specs(pspecs, params_shapes, ocfg)
+        state_sds = {"params": params_sds, "opt": _sds(opt_shapes, _ns(mesh, ospecs))}
+        step = steps_lib.make_train_step(api, ocfg)
+        state_ns = jax.tree.map(lambda s: s.sharding, state_sds)
+        metrics_ns = {"loss": scalar_ns, "grad_norm": scalar_ns, "lr": scalar_ns}
+        return step, (state_sds, batch_sds), (0,), (state_ns, metrics_ns)
+
+    if shape.kind == "prefill":
+        step = steps_lib.make_prefill_step(api)
+        cache_shapes = jax.eval_shape(
+            lambda: api.init_cache(shape.global_batch, shape.seq_len))
+        cspecs = shd.tree_cache_specs(cache_shapes, mesh, shape.global_batch)
+        cache_ns = _ns(mesh, cspecs)
+        tok_ns = NamedSharding(mesh, shd.batch_specs(
+            {"t": jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)}, mesh)["t"])
+        return step, (params_sds, batch_sds), (), (tok_ns, cache_ns)
+
+    # decode: params + cache + one-token batch
+    step = steps_lib.make_decode_step(api)
+    cache_shapes = jax.eval_shape(
+        lambda: api.init_cache(shape.global_batch, shape.seq_len))
+    cspecs = shd.tree_cache_specs(cache_shapes, mesh, shape.global_batch)
+    cache_sds = _sds(cache_shapes, _ns(mesh, cspecs))
+    tok_ns = NamedSharding(mesh, shd.batch_specs(
+        {"t": jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)}, mesh)["t"])
+    cache_ns = jax.tree.map(lambda s: s.sharding, cache_sds)
+    return step, (params_sds, cache_sds, batch_sds), (1,), (tok_ns, cache_ns)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, outdir: Path,
+             variant: str | None = None) -> dict:
+    mesh_name = "multipod" if multi_pod else "pod"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "ok": False,
+           "variant": variant}
+    runnable, why = cell_is_runnable(arch, shape_by_name(shape_name))
+    if not runnable:
+        rec.update(skipped=True, reason=why, ok=True)
+        return rec
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        shd.set_activation_axes(mesh)
+        step, args, donate, out_shardings = input_specs(arch, shape_name, mesh,
+                                                        variant)
+        with mesh:
+            jitted = jax.jit(step, donate_argnums=donate,
+                             out_shardings=out_shardings)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            cost = compiled.cost_analysis() or {}
+            try:
+                ma = compiled.memory_analysis()
+                mem = {k: getattr(ma, k) for k in dir(ma)
+                       if k.endswith("_bytes") or k.endswith("_size_in_bytes")}
+            except Exception as e:  # CPU backend may not expose it
+                mem = {"error": str(e)}
+            hlo = compiled.as_text()
+            coll = collective_bytes(hlo)
+            tripaware = hlo_lib.analyze(hlo)
+        rec.update(
+            ok=True,
+            lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            flops=cost.get("flops"),
+            bytes_accessed=cost.get("bytes accessed"),
+            cost_keys={k: v for k, v in cost.items()
+                       if isinstance(v, (int, float)) and abs(v) < 1e30},
+            memory_analysis=mem,
+            collectives=coll,
+            tripaware=tripaware,
+            num_devices=mesh.devices.size,
+            hlo_size=len(hlo),
+        )
+    except Exception as e:
+        rec.update(error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    outdir.mkdir(parents=True, exist_ok=True)
+    tag = f"{arch}__{shape_name}__{mesh_name}" + (f"__{variant}" if variant else "")
+    (outdir / f"{tag}.json").write_text(json.dumps(rec, indent=1, default=str))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=str(RESULTS))
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+    outdir = Path(args.out)
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    if args.all:
+        cells = [(a, s.name) for a in registry.list_archs() for s in LM_SHAPES]
+    else:
+        cells = [(args.arch, args.shape)]
+
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch}__{shape}__{'multipod' if mp else 'pod'}"
+            if args.skip_existing and (outdir / f"{tag}.json").exists():
+                prev = json.loads((outdir / f"{tag}.json").read_text())
+                if prev.get("ok"):
+                    print(f"[skip] {tag}")
+                    continue
+            t0 = time.time()
+            rec = run_cell(arch, shape, mp, outdir)
+            status = ("SKIP " + rec.get("reason", "")[:40]) if rec.get("skipped") \
+                else ("ok" if rec["ok"] else "FAIL " + rec.get("error", "")[:120])
+            print(f"[{time.time()-t0:7.1f}s] {tag}: {status}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Production mesh definitions (16x16 single pod, 2x16x16 multi-pod).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (jax locks the device count on first backend init).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever this host actually has (smoke tests: 1 CPU device)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """Axes the global batch shards over."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def axis_size(mesh, *names: str) -> int:
+    s = 1
+    for n in names:
+        if n in mesh.axis_names:
+            s *= mesh.shape[n]
+    return s

@@ -1,0 +1,167 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Dry-run cells for the paper's own architecture (extra rows beyond the 40).
+
+The RSNN is an always-on edge model; its datacenter-scale TPU shape is
+MANY CONCURRENT AUDIO STREAMS:
+  rsnn_train:  4096 one-second utterances (100 frames) per step
+  rsnn_serve:  65536 live streams, one 10-ms frame step each (the paper's
+               real-time constraint: this step must finish in <10 ms)
+
+Variants (§Perf):
+  paper      — parallel time steps + merged-spike FC (the paper's dataflow)
+  layerwise  — ablation: per-ts FC matmuls (no merged spike), the
+               layer-by-layer dataflow the paper argues against
+  ts1        — single-time-step execution
+"""
+
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import rsnn
+from repro.core.rsnn import RSNNConfig
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.training import optimizer as opt_lib
+from repro.training.optimizer import OptimizerConfig
+
+RSNN_VARIANTS = {
+    "paper": RSNNConfig(hidden_dim=128, num_ts=2, merged_spike=True),
+    "layerwise": RSNNConfig(hidden_dim=128, num_ts=2, merged_spike=False),
+    "ts1": RSNNConfig(hidden_dim=128, num_ts=1),
+    "baseline256": RSNNConfig(hidden_dim=256, num_ts=2, merged_spike=True),
+    # beyond-paper: the 0.1 MB model REPLICATES per chip (the TPU analogue
+    # of the paper's everything-on-chip SRAM) — no TP collectives at all,
+    # the 'model' axis becomes extra stream parallelism
+    "paper_dp": RSNNConfig(hidden_dim=128, num_ts=2, merged_spike=True),
+}
+
+TRAIN_BATCH, FRAMES = 4096, 100
+SERVE_BATCH = 65536
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def _sds(shapes, ns):
+    return jax.tree.map(lambda s, n: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=n),
+                        shapes, ns)
+
+
+def run_rsnn_cell(kind: str, variant: str, multi_pod: bool, outdir: Path) -> dict:
+    cfg = RSNN_VARIANTS[variant]
+    mesh_name = "multipod" if multi_pod else "pod"
+    rec = {"arch": "rsnn-timit", "shape": kind, "mesh": mesh_name,
+           "variant": variant, "ok": False}
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        shd.set_activation_axes(mesh)
+        params_shapes = jax.eval_shape(
+            lambda k: rsnn.init_params(k, cfg), jax.random.PRNGKey(0))
+        if variant.endswith("_dp"):
+            pspecs = jax.tree.map(lambda s: P(*([None] * len(s.shape))),
+                                  params_shapes)
+        else:
+            pspecs = shd.tree_param_specs(params_shapes, mesh)
+        params_sds = _sds(params_shapes, _ns(mesh, pspecs))
+        if variant.endswith("_dp"):
+            # batch shards over EVERY axis: 256-way stream parallelism
+            dax = ("pod", "data", "model") if multi_pod else ("data", "model")
+        else:
+            dax = ("pod", "data") if multi_pod else ("data",)
+        dspec = P(dax if len(dax) > 1 else dax[0])
+
+        if kind == "rsnn_train":
+            ocfg = OptimizerConfig(name="adamw")
+            opt_shapes = jax.eval_shape(
+                lambda p: opt_lib.init_opt_state(p, ocfg), params_shapes)
+            ospecs = opt_lib.state_specs(pspecs, params_shapes, ocfg)
+            state_sds = {"params": params_sds,
+                         "opt": _sds(opt_shapes, _ns(mesh, ospecs))}
+            batch_sds = {
+                "features": jax.ShapeDtypeStruct(
+                    (TRAIN_BATCH, FRAMES, cfg.input_dim), jnp.float32,
+                    sharding=NamedSharding(mesh, P(dspec[0], None, None))),
+                "labels": jax.ShapeDtypeStruct(
+                    (TRAIN_BATCH, FRAMES), jnp.int32,
+                    sharding=NamedSharding(mesh, P(dspec[0], None))),
+            }
+
+            def train_step(state, batch):
+                def loss(p):
+                    return rsnn.loss_fn(p, batch, cfg)[0]
+                l, g = jax.value_and_grad(loss)(state["params"])
+                np_, no_, m = opt_lib.apply_updates(state["params"], g,
+                                                    state["opt"], ocfg)
+                return {"params": np_, "opt": no_}, dict(m, loss=l)
+
+            args = (state_sds, batch_sds)
+            jitted = jax.jit(train_step, donate_argnums=(0,))
+        else:  # rsnn_serve: one 10-ms frame step across SERVE_BATCH streams
+            state_shapes = jax.eval_shape(
+                lambda: rsnn.init_state(cfg, SERVE_BATCH, cfg.num_ts))
+            if variant.endswith("_dp"):
+                bspec = dspec[0]
+                sspecs = jax.tree.map(
+                    lambda s: P(*[bspec if dim == SERVE_BATCH else None
+                                  for dim in s.shape]), state_shapes)
+            else:
+                sspecs = shd.tree_cache_specs(state_shapes, mesh, SERVE_BATCH)
+            state_sds = _sds(state_shapes, _ns(mesh, sspecs))
+            x_sds = jax.ShapeDtypeStruct(
+                (SERVE_BATCH, cfg.input_dim), jnp.float32,
+                sharding=NamedSharding(mesh, P(dspec[0], None)))
+
+            def serve_step(params, state, x_t):
+                st, (logits, _) = rsnn.frame_step(params, state, x_t, cfg)
+                return jnp.argmax(logits, -1).astype(jnp.int32), st
+
+            args = (params_sds, state_sds, x_sds)
+            jitted = jax.jit(serve_step, donate_argnums=(1,))
+
+        with mesh:
+            lowered = jitted.lower(*args)
+            compiled = lowered.compile()
+            cost = compiled.cost_analysis() or {}
+            try:
+                ma = compiled.memory_analysis()
+                mem = {k: getattr(ma, k) for k in dir(ma)
+                       if k.endswith("_bytes") or k.endswith("_size_in_bytes")}
+            except Exception as e:
+                mem = {"error": str(e)}
+            from repro.analysis import hlo as hlo_lib
+            rec.update(ok=True, compile_s=round(time.time() - t0, 2),
+                       flops=cost.get("flops"), memory_analysis=mem,
+                       tripaware=hlo_lib.analyze(compiled.as_text()),
+                       num_devices=mesh.devices.size)
+    except Exception as e:
+        rec.update(error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2500:])
+    outdir.mkdir(parents=True, exist_ok=True)
+    (outdir / f"rsnn-timit__{kind}__{mesh_name}__{variant}.json").write_text(
+        json.dumps(rec, indent=1, default=str))
+    return rec
+
+
+if __name__ == "__main__":
+    import sys
+
+    out = Path("results/hillclimb")
+    for kind in ("rsnn_train", "rsnn_serve"):
+        for variant in RSNN_VARIANTS:
+            for mp in ((False, True) if "--both" in sys.argv else (False,)):
+                r = run_rsnn_cell(kind, variant, mp, out)
+                print(kind, variant, "multipod" if mp else "pod",
+                      "ok" if r["ok"] else "FAIL " + r.get("error", "")[:120],
+                      flush=True)

@@ -1,0 +1,84 @@
+"""Train / prefill / decode step factories + input shape builders.
+
+These are the functions the dry-run lowers and the trainer/server run.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.registry import ModelAPI
+from repro.training import optimizer as opt_lib
+from repro.training.optimizer import OptimizerConfig
+
+
+def ce_next_token_loss(logits: jax.Array, tokens: jax.Array) -> jax.Array:
+    """Next-token cross entropy in fp32, vocab-sharding-friendly.
+
+    The logits stay sharded on the vocab dim ('model' axis): the target
+    log-prob is picked with a fused iota==target mask (no gather across the
+    sharded dim, no one-hot matmul), and logsumexp reduces locally before
+    the tiny cross-shard all-reduce."""
+    from repro.distributed import sharding as shd
+
+    logits = shd.constrain_last_dim(logits[:, :-1].astype(jnp.float32))
+    targets = tokens[:, 1:]
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+    vocab_ids = jnp.arange(logits.shape[-1], dtype=targets.dtype)
+    tgt = jnp.sum(jnp.where(vocab_ids == targets[..., None], logits, 0.0), axis=-1)
+    return jnp.mean(lse - tgt)
+
+
+def make_train_step(api: ModelAPI, ocfg: OptimizerConfig):
+    def train_step(state: dict, batch: dict):
+        def loss_fn(params):
+            logits, _ = api.forward(params, batch, mode="train")
+            return ce_next_token_loss(logits, batch["tokens"])
+
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"])
+        new_params, new_opt, metrics = opt_lib.apply_updates(
+            state["params"], grads, state["opt"], ocfg)
+        metrics = dict(metrics, loss=loss)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def make_prefill_step(api: ModelAPI):
+    def prefill_step(params, batch: dict):
+        logits, cache = api.forward(params, batch, mode="prefill")
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return prefill_step
+
+
+def make_decode_step(api: ModelAPI):
+    def decode_step(params, cache, batch: dict):
+        logits, new_cache = api.forward(params, batch, cache=cache)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, new_cache
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Input shape builders (ShapeDtypeStructs — no allocation)
+# ---------------------------------------------------------------------------
+
+
+def batch_shapes(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b = shape.global_batch
+    s = 1 if shape.kind == "decode" else shape.seq_len
+    out = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if shape.kind != "decode":
+        if cfg.frontend == "patch":
+            out["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_patch_tokens, cfg.d_model), cfg.dtype)
+        if cfg.family == "audio":
+            out["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq, cfg.d_model), cfg.dtype)
+    return out

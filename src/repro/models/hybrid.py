@@ -1,0 +1,151 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a SHARED attention block applied
+every `attn_every` layers (weight reuse across applications — the same
+memory-traffic insight as the paper's parallel-time-step weight sharing,
+at the architecture level).
+
+Structure: n_groups super-blocks, each = scan over `attn_every` stacked
+Mamba2 layers + one application of the shared attention/MLP block; plus a
+scanned tail of leftover Mamba2 layers. Decode carries Mamba2 states per
+layer + one KV cache per shared-block application.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import basic
+from repro.models.layers import attention as attn_lib
+from repro.models.layers import mamba2 as m2
+
+GLOBAL_WINDOW = jnp.int32(2 ** 30)
+
+
+def _split(cfg) -> tuple[int, int, int]:
+    g = cfg.attn_every
+    n_groups = cfg.num_layers // g
+    tail = cfg.num_layers - n_groups * g
+    return g, n_groups, tail
+
+
+def _init_mamba_layer(key, cfg):
+    return {"norm": basic.init_norm(cfg, cfg.d_model),
+            "mamba": m2.init_mamba2(key, cfg)}
+
+
+def init_hybrid(key, cfg) -> dict:
+    g, n_groups, tail = _split(cfg)
+    kemb, kgrp, ktail, kattn, kmlp = jax.random.split(key, 5)
+
+    grp_keys = jax.random.split(kgrp, n_groups * g).reshape(n_groups, g, 2)
+    groups = jax.vmap(jax.vmap(lambda k: _init_mamba_layer(k, cfg)))(grp_keys)
+    params: dict[str, Any] = {
+        "embed": basic.init_embedding(kemb, cfg),
+        "groups": groups,  # leaves: (n_groups, g, ...)
+        "shared_attn": {
+            "attn_norm": basic.init_norm(cfg, cfg.d_model),
+            "attn": attn_lib.init_attn(kattn, cfg),
+            "mlp_norm": basic.init_norm(cfg, cfg.d_model),
+            "mlp": basic.init_mlp(kmlp, cfg, cfg.d_model, cfg.d_ff),
+        },
+        "final_norm": basic.init_norm(cfg, cfg.d_model),
+    }
+    if tail:
+        tail_keys = jax.random.split(ktail, tail).reshape(tail, 2)
+        params["tail"] = jax.vmap(lambda k: _init_mamba_layer(k, cfg))(tail_keys)
+    return params
+
+
+class HybridCache(NamedTuple):
+    group_states: Any  # Mamba2State leaves stacked (n_groups, g, ...)
+    tail_states: Any  # (tail, ...)
+    attn_caches: Any  # KVCache leaves stacked (n_groups, ...)
+    pos: jax.Array
+
+
+def init_hybrid_cache(cfg, batch: int, max_len: int) -> HybridCache:
+    g, n_groups, tail = _split(cfg)
+    one = m2.init_mamba2_state(cfg, batch)
+    stack = lambda n, t: jax.tree.map(lambda x: jnp.zeros((n,) + x.shape, x.dtype), t)
+    kv = attn_lib.init_kv_cache(cfg, batch, max_len)
+    return HybridCache(
+        group_states=stack(n_groups, stack(g, one)),
+        tail_states=stack(tail, one) if tail else None,
+        attn_caches=stack(n_groups, kv),
+        pos=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def _shared_attn(x, p, cfg, positions, cache, cache_pos, return_kv=False):
+    h = basic.apply_norm(x, p["attn_norm"], cfg)
+    a, nc = attn_lib.attention(h, p["attn"], cfg, positions,
+                               layer_window=GLOBAL_WINDOW, cache=cache,
+                               cache_pos=cache_pos, return_kv=return_kv)
+    x = x + a
+    h = basic.apply_norm(x, p["mlp_norm"], cfg)
+    return x + basic.mlp(h, p["mlp"], cfg), nc
+
+
+def hybrid_forward(params, tokens, cfg, cache: HybridCache | None = None,
+                   mode: str = "train"):
+    g, n_groups, tail = _split(cfg)
+    b, s = tokens.shape
+    x = basic.embed_tokens(tokens, params["embed"], cfg)
+    decode = cache is not None
+    mode = "decode" if decode else mode
+    prefill = mode == "prefill"
+    if decode:
+        positions = cache.pos[:, None]
+        cache_pos = cache.pos
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        cache_pos = None
+
+    def mamba_scan(x, stacked_layers, stacked_states):
+        def body(x, scanned):
+            lp, st = scanned
+            h = basic.apply_norm(x, lp["norm"], cfg)
+            if cfg.remat == "full" and mode == "train":
+                out, ns = jax.checkpoint(
+                    lambda h, mp: m2.mamba2_layer(h, mp, cfg, None))(h, lp["mamba"])
+            else:
+                out, ns = m2.mamba2_layer(h, lp["mamba"], cfg, st)
+            return x + out, ns
+        if stacked_states is None:
+            return jax.lax.scan(lambda c, lp: body(c, (lp, None)), x, stacked_layers)
+        return jax.lax.scan(body, x, (stacked_layers, stacked_states))
+
+    def group_body(x, scanned):
+        glayers, gstates, kv = scanned
+        x, new_states = mamba_scan(x, glayers, gstates)
+        x, new_kv = _shared_attn(x, params["shared_attn"], cfg, positions,
+                                 kv, cache_pos, return_kv=prefill)
+        return x, (new_states, new_kv)
+
+    if decode:
+        x, (new_gstates, new_kvs) = jax.lax.scan(
+            group_body, x, (params["groups"], cache.group_states, cache.attn_caches))
+    else:
+        x, (new_gstates, new_kvs) = jax.lax.scan(
+            lambda c, sc: group_body(c, (sc, None, None)), x, params["groups"])
+
+    new_tail = None
+    if tail:
+        x, new_tail = mamba_scan(x, params["tail"],
+                                 cache.tail_states if decode else None)
+
+    if prefill:
+        x = x[:, -1:]
+    x = basic.apply_norm(x, params["final_norm"], cfg)
+    logits = basic.unembed(x, params["embed"], cfg)
+    new_cache = None
+    if decode:
+        new_cache = HybridCache(group_states=new_gstates, tail_states=new_tail,
+                                attn_caches=new_kvs, pos=cache.pos + 1)
+    elif prefill:
+        new_cache = HybridCache(group_states=new_gstates, tail_states=new_tail,
+                                attn_caches=new_kvs,
+                                pos=jnp.full((b,), s, jnp.int32))
+    return logits, new_cache

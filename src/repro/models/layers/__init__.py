@@ -1,0 +1,1 @@
+from repro.models.layers import basic, attention, mla, moe, mamba2, xlstm  # noqa: F401

@@ -1,0 +1,141 @@
+"""Grouped-query attention with sliding-window / softcap / KV-cache support.
+
+Covers: internvl2 (GQA 48/8), gemma2 (alt. local/global, softcap, hd 256),
+yi (GQA 32/4), stablelm (MHA, partial rotary), gemma-7b (MQA-ish 16/16,
+hd 256), whisper (MHA, no rope, cross-attention), zamba2's shared block.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as shd
+from repro.models.layers import basic
+
+NEG_INF = -2.3819763e38  # large negative for masking in fp32
+
+
+class KVCache(NamedTuple):
+    """Pre-allocated decode cache. k/v: (B, T_max, Hkv, hd)."""
+
+    k: jax.Array
+    v: jax.Array
+
+
+def init_attn(key, cfg, d_model: int | None = None, rope: bool = True,
+              cross: bool = False) -> dict:
+    d = d_model or cfg.d_model
+    hd = cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    s = d ** -0.5
+    p = {
+        "w_q": jax.random.normal(kq, (d, cfg.num_heads * hd), cfg.dtype) * s,
+        "w_k": jax.random.normal(kk, (d, cfg.num_kv_heads * hd), cfg.dtype) * s,
+        "w_v": jax.random.normal(kv, (d, cfg.num_kv_heads * hd), cfg.dtype) * s,
+        "w_o": jax.random.normal(ko, (cfg.num_heads * hd, d), cfg.dtype) * (cfg.num_heads * hd) ** -0.5,
+    }
+    return p
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(*x.shape[:-1], n, hd)
+
+
+def _attn_core(q, k, v, mask, cfg):
+    """q: (B,Sq,Hq,hd); k,v: (B,Skv,Hkv,hd); mask broadcastable to
+    (B,Hkv,G,Sq,Skv). fp32 softmax, bf16 matmuls."""
+    b, sq, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    q = q.reshape(b, sq, hkv, g, hd)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", q, k, preferred_element_type=jnp.float32)
+    logits = logits * (cfg.resolved_head_dim ** -0.5)
+    if cfg.attn_logit_softcap:
+        c = cfg.attn_logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(b, sq, hq * hd)
+
+
+def causal_mask(sq: int, skv: int, q_offset: jax.Array | int = 0,
+                window: int | None = None) -> jax.Array:
+    """(1,1,1,Sq,Skv) boolean mask; window = sliding-window size."""
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(skv)[None, :]
+    m = kpos <= qpos
+    if window is not None:
+        m &= kpos > qpos - window
+    return m[None, None, None]
+
+
+def attention(x: jax.Array, p: dict, cfg, positions: jax.Array,
+              layer_window: int | None = None, cache: KVCache | None = None,
+              cache_pos: jax.Array | None = None, rope: bool = True,
+              kv_x: jax.Array | None = None, return_kv: bool = False,
+              ) -> tuple[jax.Array, KVCache | None]:
+    """Full GQA layer. In decode mode (cache given) x is (B,1,D) and the
+    cache is updated at cache_pos. kv_x enables cross-attention. In prefill
+    mode (return_kv) the computed post-rope K/V are returned as a cache."""
+    hd = cfg.resolved_head_dim
+    src = x if kv_x is None else kv_x
+    q = _split_heads(x @ p["w_q"], cfg.num_heads, hd)
+    k = _split_heads(src @ p["w_k"], cfg.num_kv_heads, hd)
+    v = _split_heads(src @ p["w_v"], cfg.num_kv_heads, hd)
+    # TP layout: heads over 'model' when divisible; otherwise shard the KV
+    # sequence over 'model' (distributed-softmax attention) so small-head
+    # archs (gemma2/whisper/GQA-kv) still split the attention FLOPs.
+    if shd.shardable(cfg.num_kv_heads, "model"):
+        q = shd.constrain_dims(q, {0: "batch", 2: "model"})
+        k = shd.constrain_dims(k, {0: "batch", 2: "model"})
+        v = shd.constrain_dims(v, {0: "batch", 2: "model"})
+    elif cache is None:
+        q = shd.constrain_dims(q, {0: "batch"})
+        k = shd.constrain_dims(k, {0: "batch", 1: "model"})
+        v = shd.constrain_dims(v, {0: "batch", 1: "model"})
+    if rope:
+        q = basic.apply_rope(q, positions, cfg.rope_theta, cfg.rotary_pct)
+        kpos = positions if cache is None else cache_pos[:, None]
+        k = basic.apply_rope(k, kpos, cfg.rope_theta, cfg.rotary_pct)
+
+    if cache is not None and kv_x is None:  # self-attention decode
+        # per-batch write positions: one-hot scatter (GSPMD-friendly)
+        k_cache = _scatter_cache(cache.k, k, cache_pos)
+        v_cache = _scatter_cache(cache.v, v, cache_pos)
+        t = cache.k.shape[1]
+        kpos_all = jnp.arange(t)[None, None, None, None, :]
+        qpos = cache_pos[:, None, None, None, None]
+        mask = kpos_all <= qpos
+        if layer_window is not None:
+            mask &= kpos_all > qpos - layer_window
+        out = _attn_core(q, k_cache.astype(q.dtype), v_cache.astype(q.dtype), mask, cfg)
+        new_cache = KVCache(k=k_cache, v=v_cache)
+    else:
+        if kv_x is not None:  # cross-attention: full visibility
+            mask = jnp.ones((1, 1, 1, q.shape[1], k.shape[1]), bool)
+        else:
+            mask = causal_mask(q.shape[1], k.shape[1], 0, layer_window)
+        out = _attn_core(q, k, v, mask, cfg)
+        new_cache = KVCache(k=k, v=v) if (return_kv and kv_x is None) else None
+    return out @ p["w_o"], new_cache
+
+
+def _scatter_cache(cache: jax.Array, kv: jax.Array, pos: jax.Array) -> jax.Array:
+    """Write kv (B,1,H,hd) into cache (B,T,H,hd) at per-batch position pos (B,).
+
+    Uses an indexed scatter (not a one-hot blend): XLA updates the written
+    rows in place when the cache is donated, so decode touches O(B*H*hd)
+    bytes instead of rewriting the whole cache."""
+    b = cache.shape[0]
+    return cache.at[jnp.arange(b), pos].set(kv[:, 0].astype(cache.dtype))
+
+
+def init_kv_cache(cfg, batch: int, max_len: int, dtype=None) -> KVCache:
+    hd = cfg.resolved_head_dim
+    dt = dtype or cfg.dtype
+    shape = (batch, max_len, cfg.num_kv_heads, hd)
+    return KVCache(k=jnp.zeros(shape, dt), v=jnp.zeros(shape, dt))

@@ -1,0 +1,142 @@
+"""Shared building blocks: norms, RoPE, MLPs, embeddings, frontend stubs."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6,
+            plus_one: bool = True) -> jax.Array:
+    """RMSNorm in fp32 (gemma-style (1+scale) when plus_one)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    w = (1.0 + scale.astype(jnp.float32)) if plus_one else scale.astype(jnp.float32)
+    return (x * w).astype(dt)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * scale + bias).astype(dt)
+
+
+def apply_norm(x, p, cfg):
+    if cfg.norm_type == "layernorm":
+        return layernorm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rmsnorm(x, p["scale"], cfg.norm_eps)
+
+
+def init_norm(cfg, d: int) -> dict:
+    if cfg.norm_type == "layernorm":
+        return {"scale": jnp.ones((d,), cfg.dtype), "bias": jnp.zeros((d,), cfg.dtype)}
+    return {"scale": jnp.zeros((d,), cfg.dtype)}  # (1+scale) convention
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float, rotary_pct: float = 1.0
+                     ) -> tuple[int, jax.Array]:
+    """Returns (rot_dim, inv_freq (rot_dim//2,))."""
+    rot_dim = int(head_dim * rotary_pct) // 2 * 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+    return rot_dim, inv_freq
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               rotary_pct: float = 1.0) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) int32. Partial rotary supported."""
+    hd = x.shape[-1]
+    rot_dim, inv_freq = rope_frequencies(hd, theta, rotary_pct)
+    x_rot, x_pass = x[..., :rot_dim], x[..., rot_dim:]
+    ang = positions.astype(jnp.float32)[..., None] * inv_freq  # (B,S,rot/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x_rot.astype(jnp.float32), 2, axis=-1)
+    rotated = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([rotated.astype(x.dtype), x_pass], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg, d_model: int, d_ff: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d_model ** -0.5
+    s_out = d_ff ** -0.5
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        return {
+            "w_gate": jax.random.normal(k1, (d_model, d_ff), cfg.dtype) * s_in,
+            "w_up": jax.random.normal(k2, (d_model, d_ff), cfg.dtype) * s_in,
+            "w_down": jax.random.normal(k3, (d_ff, d_model), cfg.dtype) * s_out,
+        }
+    return {
+        "w_up": jax.random.normal(k1, (d_model, d_ff), cfg.dtype) * s_in,
+        "b_up": jnp.zeros((d_ff,), cfg.dtype),
+        "w_down": jax.random.normal(k3, (d_ff, d_model), cfg.dtype) * s_out,
+        "b_down": jnp.zeros((d_model,), cfg.dtype),
+    }
+
+
+def mlp(x: jax.Array, p: dict, cfg) -> jax.Array:
+    if cfg.mlp_type == "swiglu":
+        return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    if cfg.mlp_type == "geglu":
+        return (jax.nn.gelu(x @ p["w_gate"], approximate=True) * (x @ p["w_up"])) @ p["w_down"]
+    h = jax.nn.gelu(x @ p["w_up"] + p["b_up"], approximate=True)
+    return h @ p["w_down"] + p["b_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embeddings + frontend stubs
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, cfg) -> dict:
+    v = cfg.padded_vocab
+    emb = jax.random.normal(key, (v, cfg.d_model), cfg.dtype) * 0.02
+    p = {"tok": emb}
+    if not cfg.tie_embeddings:
+        p["unembed"] = jax.random.normal(key, (cfg.d_model, v), cfg.dtype) * cfg.d_model ** -0.5
+    return p
+
+
+def embed_tokens(tokens: jax.Array, p: dict, cfg) -> jax.Array:
+    x = jnp.take(p["tok"], tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def unembed(x: jax.Array, p: dict, cfg) -> jax.Array:
+    w = p["tok"].T if cfg.tie_embeddings else p["unembed"]
+    logits = x @ w
+    if cfg.final_logit_softcap:
+        c = cfg.final_logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    return logits
+
+
+def splice_frontend_embeddings(x_tok: jax.Array, frontend_embeds: jax.Array
+                               ) -> jax.Array:
+    """VLM/audio stub: prepend precomputed modality embeddings to the token
+    embeddings, preserving total sequence length (the first N token slots are
+    image/audio placeholder positions, as in InternVL chat templates)."""
+    n = frontend_embeds.shape[1]
+    return jnp.concatenate([frontend_embeds.astype(x_tok.dtype), x_tok[:, n:]], axis=1)

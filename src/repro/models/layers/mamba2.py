@@ -1,0 +1,182 @@
+"""Mamba2 (SSD) block — zamba2's recurrent backbone.
+
+Train/prefill run the selective-state recurrence as a `lax.scan` over the
+sequence (projections stay outside the scan so the MXU work is batched);
+decode carries (conv_state, ssm_state) — O(1) per token, which is why
+zamba2 runs the long_500k cell.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Mamba2State(NamedTuple):
+    conv: jax.Array  # (B, conv_dim, d_conv-1) rolling conv window
+    ssm: jax.Array  # (B, heads, head_dim, d_state)
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    heads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.d_state
+    return d_inner, heads, conv_dim
+
+
+def init_mamba2(key, cfg) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, heads, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    sc = d ** -0.5
+    return {
+        # [z, xBC, dt] fused input projection
+        "w_in": jax.random.normal(ks[0], (d, d_inner + conv_dim + heads), cfg.dtype) * sc,
+        "conv_w": jax.random.normal(ks[1], (s.d_conv, conv_dim), cfg.dtype) * 0.2,
+        "conv_b": jnp.zeros((conv_dim,), cfg.dtype),
+        "a_log": jnp.zeros((heads,), jnp.float32),  # A = -exp(a_log)
+        "dt_bias": jnp.zeros((heads,), jnp.float32),
+        "d_skip": jnp.ones((heads,), jnp.float32),
+        "w_out": jax.random.normal(ks[2], (d_inner, d), cfg.dtype) * d_inner ** -0.5,
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B,S,C); w: (K,C)."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    return out + b
+
+
+def mamba2_layer(x: jax.Array, p: dict, cfg,
+                 state: Mamba2State | None = None
+                 ) -> tuple[jax.Array, Mamba2State | None]:
+    """x: (B,S,D). state!=None => single-token decode (S==1)."""
+    s = cfg.ssm
+    d_inner, heads, conv_dim = _dims(cfg)
+    b, seq, _ = x.shape
+
+    zxbcdt = x @ p["w_in"]
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, d_inner + conv_dim], axis=-1)
+
+    if state is None:
+        # rolling conv window of the final (d_conv-1) raw inputs (prefill handoff)
+        new_conv = jnp.swapaxes(xbc, 1, 2)[..., -(s.d_conv - 1):]
+        xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+    else:
+        window = jnp.concatenate([state.conv, jnp.swapaxes(xbc, 1, 2)], axis=2)
+        conv_out = jnp.einsum("bck,kc->bc", window.astype(cfg.dtype),
+                              p["conv_w"]) + p["conv_b"]
+        xbc = jax.nn.silu(conv_out)[:, None, :]
+        new_conv = window[:, :, 1:]
+
+    xs, bs, cs = jnp.split(xbc, [d_inner, d_inner + s.d_state], axis=-1)
+    xs = xs.reshape(b, -1, heads, s.head_dim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(p["a_log"])  # (H,)
+    decay = jnp.exp(dt * a)  # (B,S,H)
+
+    def step(h, inp):
+        x_t, b_t, c_t, dec_t, dt_t = inp
+        # h: (B,H,hd,N)
+        h = h * dec_t[..., None, None] + \
+            (dt_t[..., None] * x_t.astype(jnp.float32))[..., None] * b_t[:, None, None, :].astype(jnp.float32)
+        y = jnp.einsum("bhdn,bn->bhd", h, c_t.astype(jnp.float32))
+        return h, y
+
+    if state is None and getattr(s, "scan_impl", "chunked") == "chunked" \
+            and seq % max(getattr(s, "chunk", 128), 1) == 0 and seq > 1:
+        y, h_last = _mamba2_chunked(xs, bs, cs, dt, a, s.chunk)
+        new_ssm = h_last
+    elif state is None:
+        h0 = jnp.zeros((b, heads, s.head_dim, s.d_state), jnp.float32)
+        inputs = (jnp.swapaxes(xs, 0, 1), jnp.swapaxes(bs, 0, 1),
+                  jnp.swapaxes(cs, 0, 1), jnp.swapaxes(decay, 0, 1),
+                  jnp.swapaxes(dt, 0, 1))
+        h_last, ys = jax.lax.scan(step, h0, inputs)
+        y = jnp.swapaxes(ys, 0, 1)  # (B,S,H,hd)
+        new_ssm = h_last
+    else:
+        h_last, y1 = step(state.ssm.astype(jnp.float32),
+                          (xs[:, 0], bs[:, 0], cs[:, 0], decay[:, 0], dt[:, 0]))
+        y = y1[:, None]
+        new_ssm = h_last
+
+    y = y + p["d_skip"][:, None] * xs.astype(jnp.float32)
+    y = (y.reshape(b, -1, d_inner) * jax.nn.silu(z.astype(jnp.float32))).astype(cfg.dtype)
+    out = y @ p["w_out"]
+    new_state = Mamba2State(conv=new_conv.astype(cfg.dtype), ssm=new_ssm)
+    return out, new_state
+
+
+def _mamba2_chunked(xs, bs, cs, dt, a, chunk: int):
+    """Chunked SSD form of the selective-state recurrence (§Perf hillclimb).
+
+    Recurrence  h_t = exp(dt_t a) h_{t-1} + (dt_t x_t) (x) b_t ;  y_t = h_t c_t
+    is evaluated per chunk of length L: within-chunk terms become a masked
+    (L x L) attention-like matmul and the carried state is materialised only
+    at chunk BOUNDARIES — HBM state traffic drops by ~L vs the sequential
+    scan (the paper's fetch-once/reuse insight applied to recurrent state).
+
+    xs: (B,S,H,hd); bs/cs: (B,S,N); dt: (B,S,H) fp32; a: (H,).
+    Returns (y (B,S,H,hd) fp32, h_last (B,H,hd,N) fp32).
+    """
+    b, seq, h, hd = xs.shape
+    n = bs.shape[-1]
+    nc, L = seq // chunk, chunk
+    shp = lambda t: t.reshape(b, nc, L, *t.shape[2:])
+    xs_c = shp(xs.astype(jnp.float32))
+    bs_c = shp(bs.astype(jnp.float32))
+    cs_c = shp(cs.astype(jnp.float32))
+    dt_c = shp(dt)
+    logd = dt_c * a  # (B,nc,L,H) log-decay, <= 0
+    cum = jnp.cumsum(logd, axis=2)  # inclusive within-chunk cumulative
+    u = dt_c[..., None] * xs_c  # (B,nc,L,H,hd) dt-scaled inputs
+
+    from repro.distributed import sharding as shd
+
+    # intra-chunk: scores shared across heads, decay weights per head
+    # (head dim pinned to 'model' so the L x L x H tensors shard under TP)
+    u = shd.constrain_dims(u, {0: "batch", 3: "model"})
+    scores = jnp.einsum("bcln,bcsn->bcls", cs_c, bs_c)  # (B,nc,L,L)
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    # w[t,s] = exp(cum_t - cum_s) for s <= t
+    wlog = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,L(t),L(s),H)
+    w = jnp.where(mask[None, None, :, :, None], jnp.exp(wlog), 0.0)
+    w = shd.constrain_dims(w, {0: "batch", 4: "model"})
+    y_intra = jnp.einsum("bclsh,bcls,bcshd->bclhd", w, scores, u)
+    y_intra = shd.constrain_dims(y_intra, {0: "batch", 3: "model"})
+
+    # chunk-boundary states: h'_c = exp(cumL) h_c + sum_s exp(cumL - cum_s) u_s b_s
+    dec_L = jnp.exp(cum[:, :, -1])  # (B,nc,H)
+    inj = jnp.einsum("bcsh,bcshd,bcsn->bchdn",
+                     jnp.exp(cum[:, :, -1:, :] - cum), u, bs_c)
+    inj = shd.constrain_dims(inj, {0: "batch", 2: "model"})
+
+    def boundary(hprev, inp):
+        d, s_c = inp  # d: (B,H); s_c: (B,H,hd,N)
+        hnew = hprev * d[..., None, None] + s_c
+        return hnew, hprev  # emit the state ENTERING the chunk
+
+    h0 = jnp.zeros((b, h, hd, n), jnp.float32)
+    h_last, h_in = jax.lax.scan(
+        boundary, h0, (jnp.moveaxis(dec_L, 1, 0), jnp.moveaxis(inj, 1, 0)))
+    h_in = jnp.moveaxis(h_in, 0, 1)  # (B,nc,H,hd,N) boundary states
+
+    y_inter = jnp.einsum("bclh,bcln,bchdn->bclhd", jnp.exp(cum), cs_c, h_in)
+    y = (y_intra + y_inter).reshape(b, seq, h, hd)
+    return y, h_last
+
+
+def init_mamba2_state(cfg, batch: int) -> Mamba2State:
+    s = cfg.ssm
+    d_inner, heads, conv_dim = _dims(cfg)
+    return Mamba2State(
+        conv=jnp.zeros((batch, conv_dim, s.d_conv - 1), cfg.dtype),
+        ssm=jnp.zeros((batch, heads, s.head_dim, s.d_state), jnp.float32),
+    )

@@ -1,0 +1,101 @@
+"""Multi-head Latent Attention (DeepSeek-V3 / Kimi-K2).
+
+Queries and keys/values are projected through low-rank latents; the decode
+cache stores only the compressed KV latent (kv_lora_rank) plus the shared
+RoPE key (qk_rope_head_dim) — the paper-family's KV-memory saving.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import basic
+from repro.models.layers.attention import NEG_INF
+
+
+class MLACache(NamedTuple):
+    kv_latent: jax.Array  # (B, T, kv_lora_rank)
+    k_rope: jax.Array  # (B, T, qk_rope_head_dim)
+
+
+def init_mla(key, cfg) -> dict:
+    m = cfg.mla
+    d = cfg.d_model
+    h = cfg.num_heads
+    ks = jax.random.split(key, 8)
+    s = d ** -0.5
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "w_dq": jax.random.normal(ks[0], (d, m.q_lora_rank), cfg.dtype) * s,
+        "q_norm": jnp.zeros((m.q_lora_rank,), cfg.dtype),
+        "w_uq": jax.random.normal(ks[1], (m.q_lora_rank, h * qk_head), cfg.dtype) * m.q_lora_rank ** -0.5,
+        "w_dkv": jax.random.normal(ks[2], (d, m.kv_lora_rank), cfg.dtype) * s,
+        "kv_norm": jnp.zeros((m.kv_lora_rank,), cfg.dtype),
+        "w_kr": jax.random.normal(ks[3], (d, m.qk_rope_head_dim), cfg.dtype) * s,
+        "w_uk": jax.random.normal(ks[4], (m.kv_lora_rank, h * m.qk_nope_head_dim), cfg.dtype) * m.kv_lora_rank ** -0.5,
+        "w_uv": jax.random.normal(ks[5], (m.kv_lora_rank, h * m.v_head_dim), cfg.dtype) * m.kv_lora_rank ** -0.5,
+        "w_o": jax.random.normal(ks[6], (h * m.v_head_dim, d), cfg.dtype) * (h * m.v_head_dim) ** -0.5,
+    }
+
+
+def mla_attention(x: jax.Array, p: dict, cfg, positions: jax.Array,
+                  cache: MLACache | None = None,
+                  cache_pos: jax.Array | None = None, return_kv: bool = False,
+                  ) -> tuple[jax.Array, MLACache | None]:
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.num_heads
+
+    # --- queries through the q-latent -----------------------------------
+    q_lat = basic.rmsnorm(x @ p["w_dq"], p["q_norm"], cfg.norm_eps)
+    q = (q_lat @ p["w_uq"]).reshape(b, s, h, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = basic.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    # --- compressed KV latent + shared rope key ---------------------------
+    kv_lat = basic.rmsnorm(x @ p["w_dkv"], p["kv_norm"], cfg.norm_eps)  # (B,S,r)
+    kpos = positions if cache is None else cache_pos[:, None]
+    k_rope = basic.apply_rope((x @ p["w_kr"])[:, :, None, :], kpos, cfg.rope_theta)[:, :, 0]
+
+    if cache is not None:
+        bidx = jnp.arange(b)
+        kv_lat = cache.kv_latent.at[bidx, cache_pos].set(
+            kv_lat[:, 0].astype(cache.kv_latent.dtype))
+        k_rope = cache.k_rope.at[bidx, cache_pos].set(
+            k_rope[:, 0].astype(cache.k_rope.dtype))
+        new_cache = MLACache(kv_latent=kv_lat, k_rope=k_rope)
+        kv_lat, k_rope = kv_lat.astype(x.dtype), k_rope.astype(x.dtype)
+    else:
+        new_cache = MLACache(kv_latent=kv_lat, k_rope=k_rope) if return_kv else None
+
+    t = kv_lat.shape[1]
+    k_nope = (kv_lat @ p["w_uk"]).reshape(b, t, h, m.qk_nope_head_dim)
+    v = (kv_lat @ p["w_uv"]).reshape(b, t, h, m.v_head_dim)
+
+    # --- attention scores: nope part + shared rope part -------------------
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q_nope, k_nope,
+                        preferred_element_type=jnp.float32)
+    logits += jnp.einsum("bqhd,bkd->bhqk", q_rope, k_rope,
+                         preferred_element_type=jnp.float32)
+    logits *= (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+
+    if cache is not None:
+        mask = jnp.arange(t)[None, None, None, :] <= cache_pos[:, None, None, None]
+    else:
+        mask = (jnp.arange(t)[None, :] <= jnp.arange(s)[:, None])[None, None]
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(b, s, h * m.v_head_dim)
+    return out @ p["w_o"], new_cache
+
+
+def init_mla_cache(cfg, batch: int, max_len: int, dtype=None) -> MLACache:
+    m = cfg.mla
+    dt = dtype or cfg.dtype
+    return MLACache(
+        kv_latent=jnp.zeros((batch, max_len, m.kv_lora_rank), dt),
+        k_rope=jnp.zeros((batch, max_len, m.qk_rope_head_dim), dt),
+    )

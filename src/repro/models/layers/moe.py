@@ -1,0 +1,148 @@
+"""Mixture-of-Experts layer (DeepSeek-V3 / Kimi-K2 family).
+
+Baseline routing is GShard-style capacity-factor dispatch realised as two
+einsums against a (tokens, E, C) combine tensor, built per token *group* so
+the dispatch tensor stays bounded. Experts shard over the 'model' mesh axis
+(expert parallelism); GSPMD materialises the all-to-alls. The 'ragged'
+implementation (jax.lax.ragged_dot over expert-sorted tokens) removes the
+dispatch-einsum FLOP overhead and is used by the §Perf hillclimb.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as shd
+
+
+def init_moe(key, cfg) -> dict:
+    m = cfg.moe
+    d, f, e = cfg.d_model, m.d_ff, m.num_experts
+    ks = jax.random.split(key, 5)
+    s_in, s_out = d ** -0.5, f ** -0.5
+    p = {
+        "router": jax.random.normal(ks[0], (d, e), jnp.float32) * s_in,
+        "w_gate": jax.random.normal(ks[1], (e, d, f), cfg.dtype) * s_in,
+        "w_up": jax.random.normal(ks[2], (e, d, f), cfg.dtype) * s_in,
+        "w_down": jax.random.normal(ks[3], (e, f, d), cfg.dtype) * s_out,
+    }
+    if m.num_shared_experts:
+        fs = m.d_ff * m.num_shared_experts
+        k1, k2, k3 = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": jax.random.normal(k1, (d, fs), cfg.dtype) * s_in,
+            "w_up": jax.random.normal(k2, (d, fs), cfg.dtype) * s_in,
+            "w_down": jax.random.normal(k3, (fs, d), cfg.dtype) * fs ** -0.5,
+        }
+    return p
+
+
+def _group_dispatch(probs: jax.Array, k: int, capacity: int):
+    """GShard dispatch for one token group. probs: (G, E) fp32.
+
+    Returns combine (G, E, C) fp32 and aux loss terms.
+    """
+    g, e = probs.shape
+    gate_vals, idx = jax.lax.top_k(probs, k)  # (G, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.float32)  # (G, k, E)
+    # Slot-major priority: all tokens' slot-0 choices first (GShard).
+    slot_major = onehot.transpose(1, 0, 2).reshape(k * g, e)
+    pos = jnp.cumsum(slot_major, axis=0) - slot_major  # position within expert
+    keep = (pos < capacity) * slot_major
+    pos_c = jax.nn.one_hot(pos, capacity, dtype=jnp.float32) * keep[..., None]
+    pos_c = pos_c.reshape(k, g, e, capacity).transpose(1, 0, 2, 3)  # (G,k,E,C)
+    combine = jnp.einsum("gk,gkec->gec", gate_vals, pos_c)
+    return combine
+
+
+def moe_layer(x: jax.Array, p: dict, cfg) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D). Dense-dispatch GShard implementation."""
+    m = cfg.moe
+    b, s, d = x.shape
+    e, k = m.num_experts, m.top_k
+    tokens = x.reshape(-1, d)
+    n_tok = tokens.shape[0]
+    g = min(m.group_size, n_tok)
+    assert n_tok % g == 0, f"{n_tok} tokens not divisible by group {g}"
+    n_groups = n_tok // g
+    capacity = max(int(g * k / e * m.capacity_factor), 4)
+
+    probs = jax.nn.softmax((tokens.astype(jnp.float32) @ p["router"]), axis=-1)
+    # group-major layout pinned BEFORE top_k so routing stays token-local
+    probs_g = shd.constrain_dims(probs.reshape(n_groups, g, e), {0: "batch"})
+    combine = jax.vmap(_group_dispatch, in_axes=(0, None, None))(
+        probs_g, k, capacity)  # (N, G, E, C)
+    combine = shd.constrain_dims(combine, {0: "batch", 2: "model"})
+    dispatch = (combine > 0).astype(x.dtype)
+
+    xg = tokens.reshape(n_groups, g, d)
+    xg = shd.constrain_dims(xg, {0: "batch"})
+    dispatch = shd.constrain_dims(dispatch, {0: "batch", 2: "model"})
+    # Pin expert weights to EP-only sharding at use: the FSDP ('data') shard
+    # of the params is ALL-GATHERED here (ZeRO-3, ~GBs/layer) — without this
+    # GSPMD prefers gathering the far larger (N,E,C,D) activations.
+    wg = shd.constrain_dims(p["w_gate"], {0: "model"})
+    wu = shd.constrain_dims(p["w_up"], {0: "model"})
+    wd = shd.constrain_dims(p["w_down"], {0: "model"})
+    # dispatch einsum: route tokens into per-expert capacity slots; the
+    # (N,E,C,D) tensor is expert-sharded -> GSPMD inserts the all-to-all (EP)
+    expert_in = shd.constrain_dims(
+        jnp.einsum("ngec,ngd->necd", dispatch, xg), {0: "batch", 1: "model"})
+    h = jnp.einsum("necd,edf->necf", expert_in, wg)
+    hu = jnp.einsum("necd,edf->necf", expert_in, wu)
+    h = shd.constrain_dims(jax.nn.silu(h) * hu, {0: "batch", 1: "model"})
+    expert_out = shd.constrain_dims(
+        jnp.einsum("necf,efd->necd", h, wd), {0: "batch", 1: "model"})
+    out = jnp.einsum("ngec,necd->ngd", combine.astype(x.dtype), expert_out)
+    out = shd.constrain_dims(out, {0: "batch"})
+    out = out.reshape(b, s, d)
+
+    if m.num_shared_experts:
+        sp = p["shared"]
+        out = out + (jax.nn.silu(x @ sp["w_gate"]) * (x @ sp["w_up"])) @ sp["w_down"]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Ragged (dropless) implementation — §Perf hillclimb variant
+# ---------------------------------------------------------------------------
+
+
+def moe_layer_ragged(x: jax.Array, p: dict, cfg) -> jax.Array:
+    """Sort tokens by expert and run jax.lax.ragged_dot — no dispatch-einsum
+    FLOPs, no capacity drops. Used when cfg.moe.router_impl == 'ragged'."""
+    m = cfg.moe
+    b, s, d = x.shape
+    e, k = m.num_experts, m.top_k
+    tokens = x.reshape(-1, d)
+    n = tokens.shape[0]
+
+    probs = jax.nn.softmax(tokens.astype(jnp.float32) @ p["router"], axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, k)  # (N, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    flat_expert = idx.reshape(-1)  # (N*k,)
+    order = jnp.argsort(flat_expert)
+    inv_order = jnp.argsort(order)
+    xs = jnp.repeat(tokens, k, axis=0)[order]  # expert-sorted replicated tokens
+    group_sizes = jnp.bincount(flat_expert, length=e)
+
+    h = jax.nn.silu(jax.lax.ragged_dot(xs, p["w_gate"], group_sizes)) * \
+        jax.lax.ragged_dot(xs, p["w_up"], group_sizes)
+    ys = jax.lax.ragged_dot(h, p["w_down"], group_sizes)
+
+    ys = ys[inv_order].reshape(n, k, d)
+    out = jnp.einsum("nk,nkd->nd", gate_vals.astype(x.dtype), ys).reshape(b, s, d)
+
+    if m.num_shared_experts:
+        sp = p["shared"]
+        out = out + (jax.nn.silu(x @ sp["w_gate"]) * (x @ sp["w_up"])) @ sp["w_down"]
+    return out
+
+
+def moe_apply(x, p, cfg):
+    if cfg.moe.router_impl == "ragged":
+        return moe_layer_ragged(x, p, cfg)
+    return moe_layer(x, p, cfg)

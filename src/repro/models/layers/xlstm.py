@@ -1,0 +1,292 @@
+"""xLSTM blocks (sLSTM + mLSTM) with optional *spiking* mode.
+
+The spiking mode is the paper's technique applied to this pool arch: the
+sLSTM hidden output is binarised by a learnable-threshold LIF-style spike
+(surrogate gradient), so the recurrent matmul h @ R consumes {0,1} spikes —
+the RSNN-ification discussed in DESIGN.md §Arch-applicability.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lif import spike_fn
+from repro.models.layers.mamba2 import _causal_conv
+
+
+class MLSTMState(NamedTuple):
+    c: jax.Array  # (B, H, d_qk, d_v) matrix memory
+    n: jax.Array  # (B, H, d_qk)
+    m: jax.Array  # (B, H) stabiliser
+    conv: jax.Array  # (B, d_inner, 3) rolling conv window (raw xm inputs)
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array  # (B, H, hd)
+    n: jax.Array
+    h: jax.Array
+    m: jax.Array  # (B, H, hd) stabiliser
+
+
+def _heads(cfg):
+    return cfg.num_heads
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg) -> dict:
+    d = cfg.d_model
+    h = _heads(cfg)
+    d_inner = 2 * d
+    d_v = d_inner // h
+    d_qk = d_v // 2
+    ks = jax.random.split(key, 8)
+    s = d ** -0.5
+    si = d_inner ** -0.5
+    return {
+        "w_up": jax.random.normal(ks[0], (d, 2 * d_inner), cfg.dtype) * s,
+        "conv_w": jax.random.normal(ks[1], (4, d_inner), cfg.dtype) * 0.2,
+        "conv_b": jnp.zeros((d_inner,), cfg.dtype),
+        "w_q": jax.random.normal(ks[2], (d_inner, h * d_qk), cfg.dtype) * si,
+        "w_k": jax.random.normal(ks[3], (d_inner, h * d_qk), cfg.dtype) * si,
+        "w_v": jax.random.normal(ks[4], (d_inner, h * d_v), cfg.dtype) * si,
+        "w_if": jax.random.normal(ks[5], (d_inner, 2 * h), jnp.float32) * si,
+        "b_if": jnp.concatenate([jnp.zeros((h,)), 3.0 * jnp.ones((h,))]),
+        "w_o": jax.random.normal(ks[6], (d_inner, d_inner), cfg.dtype) * si,
+        "w_down": jax.random.normal(ks[7], (d_inner, d), cfg.dtype) * si,
+    }
+
+
+def _mlstm_step(carry: MLSTMState, inp):
+    q, k, v, i_t, f_t = inp  # q,k: (B,H,dqk); v: (B,H,dv); gates: (B,H)
+    m_new = jnp.maximum(f_t + carry.m, i_t)
+    i = jnp.exp(i_t - m_new)
+    f = jnp.exp(f_t + carry.m - m_new)
+    c = carry.c * f[..., None, None] + i[..., None, None] * (k[..., :, None] * v[..., None, :])
+    n = carry.n * f[..., None] + i[..., None] * k
+    num = jnp.einsum("bhqv,bhq->bhv", c, q)
+    # stabilised normaliser: true-units threshold 1 becomes exp(-m) in the
+    # stabilised representation (xLSTM eq. 15)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhq,bhq->bh", n, q)), jnp.exp(-m_new))
+    h_out = num / den[..., None]
+    return MLSTMState(c=c, n=n, m=m_new, conv=carry.conv), h_out
+
+
+def mlstm_block(x: jax.Array, p: dict, cfg, state: MLSTMState | None = None
+                ) -> tuple[jax.Array, MLSTMState | None]:
+    b, seq, d = x.shape
+    h = _heads(cfg)
+    d_inner = 2 * d
+    d_v = d_inner // h
+    d_qk = d_v // 2
+
+    up = x @ p["w_up"]
+    xm, z = jnp.split(up, 2, axis=-1)
+    if state is None:
+        new_conv = jnp.swapaxes(xm, 1, 2)[..., -3:]  # prefill handoff
+        xc = jax.nn.silu(_causal_conv(xm, p["conv_w"], p["conv_b"]))
+    else:
+        window = jnp.concatenate([state.conv, jnp.swapaxes(xm, 1, 2)], axis=2)
+        conv_out = jnp.einsum("bck,kc->bc", window.astype(xm.dtype),
+                              p["conv_w"]) + p["conv_b"]
+        xc = jax.nn.silu(conv_out)[:, None, :]
+        new_conv = window[:, :, 1:]
+    q = (xc @ p["w_q"]).reshape(b, seq, h, d_qk) * d_qk ** -0.5
+    k = (xc @ p["w_k"]).reshape(b, seq, h, d_qk) * d_qk ** -0.5
+    v = (xc @ p["w_v"]).reshape(b, seq, h, d_v)
+    gates = xc.astype(jnp.float32) @ p["w_if"] + p["b_if"]
+    i_t, f_t = jnp.split(gates.reshape(b, seq, 2 * h), 2, axis=-1)
+    f_t = jax.nn.log_sigmoid(f_t)
+
+    ssm = getattr(cfg, "ssm", None)
+    chunk = getattr(ssm, "chunk", 128) if ssm else 128
+    impl = getattr(ssm, "scan_impl", "chunked") if ssm else "chunked"
+    if state is None and impl == "chunked" and seq % max(chunk, 1) == 0 and seq > 1:
+        h_seq, last = _mlstm_chunked(
+            q.astype(jnp.float32), k.astype(jnp.float32),
+            v.astype(jnp.float32), i_t, f_t, chunk, init_mlstm_state(cfg, b))
+        new_state = last._replace(conv=new_conv.astype(last.conv.dtype))
+    elif state is None:
+        state0 = init_mlstm_state(cfg, b)._replace(conv=new_conv)
+        inner0 = MLSTMState(c=state0.c, n=state0.n, m=state0.m, conv=state0.conv)
+        inputs = tuple(jnp.swapaxes(t.astype(jnp.float32), 0, 1)
+                       for t in (q, k, v, i_t, f_t))
+        last, hs = jax.lax.scan(
+            lambda carry, inp: _mlstm_step(carry, inp), inner0, inputs)
+        h_seq = jnp.swapaxes(hs, 0, 1)  # (B,S,H,dv)
+        new_state = last._replace(conv=new_conv.astype(last.conv.dtype))
+    else:
+        last, h1 = _mlstm_step(state, (q[:, 0].astype(jnp.float32),
+                                       k[:, 0].astype(jnp.float32),
+                                       v[:, 0].astype(jnp.float32),
+                                       i_t[:, 0], f_t[:, 0]))
+        h_seq = h1[:, None]
+        new_state = last._replace(conv=new_conv.astype(last.conv.dtype))
+
+    h_flat = h_seq.reshape(b, -1, d_inner).astype(cfg.dtype)
+    o = jax.nn.sigmoid(xc @ p["w_o"])
+    out = (h_flat * o * jax.nn.silu(z)) @ p["w_down"]
+    return out, new_state
+
+
+def init_mlstm_state(cfg, batch: int) -> MLSTMState:
+    h = _heads(cfg)
+    d_inner = 2 * cfg.d_model
+    d_v = d_inner // h
+    d_qk = d_v // 2
+    return MLSTMState(
+        c=jnp.zeros((batch, h, d_qk, d_v), jnp.float32),
+        n=jnp.zeros((batch, h, d_qk), jnp.float32),
+        m=jnp.full((batch, h), -1e30, jnp.float32),
+        conv=jnp.zeros((batch, d_inner, 3), cfg.dtype),
+    )
+
+
+def _mlstm_chunked(q, k, v, i_t, f_t, chunk: int, state0: MLSTMState
+                   ) -> tuple[jax.Array, MLSTMState]:
+    """Chunkwise-parallel stabilised mLSTM (§Perf hillclimb).
+
+    The matrix memory C is materialised only at chunk boundaries; the
+    within-chunk contribution is a masked (L x L) attention-like product.
+    The running stabiliser m of the sequential form equals
+    max(cumf_t + m0, max_{s<=t}(cumf_t - cumf_s + i_s)) — computed here in
+    closed form, so chunked == sequential exactly (up to fp assoc.).
+
+    q/k: (B,S,H,dqk) pre-scaled; v: (B,S,H,dv); i_t/f_t: (B,S,H) with f_t
+    already log-sigmoided. Emits h (B,S,H,dv) and the final boundary state.
+    """
+    b, seq, h, dqk = q.shape
+    dv = v.shape[-1]
+    nc, L = seq // chunk, chunk
+    shp = lambda t: t.reshape(b, nc, L, *t.shape[2:])
+    qc, kc, vc = shp(q), shp(k), shp(v)
+    ic, fc = shp(i_t), shp(f_t)
+    cumf = jnp.cumsum(fc, axis=2)  # (B,nc,L,H) inclusive
+    mask3 = jnp.tril(jnp.ones((L, L), bool))[None, :, :, None]
+
+    def chunk_body(carry, inp):
+        c0, n0, m0 = carry  # (B,H,dqk,dv), (B,H,dqk), (B,H)
+        qx, kx, vx, icx, cumfx = inp
+        # intra log-weights w[t,s] = cumf_t - cumf_s + i_s (s <= t), built
+        # INSIDE the body from the small gate vectors so the (L x L) tensor
+        # never materialises across chunks in HBM
+        wlogx = cumfx[:, :, None, :] - cumfx[:, None, :, :] + icx[:, None, :, :]
+        wlogx = jnp.where(mask3, wlogx, -jnp.inf)
+        # per-position stabiliser: max over intra terms and the boundary term
+        m_intra = jnp.max(wlogx, axis=2)  # (B,L,H) max over s
+        m_bound = cumfx + m0[:, None, :]
+        m_t = jnp.maximum(m_intra, m_bound)
+        # intra attention. Heads are few (4) so the CHUNK-POSITION dim l is
+        # pinned to 'model' instead: each TP rank owns L/16 output rows of
+        # the (L x L) products (sequence parallelism within the chunk).
+        from repro.distributed import sharding as shd
+        aw = shd.constrain_dims(jnp.exp(wlogx - m_t[:, :, None, :]),
+                                {0: "batch", 1: "model"})  # (B,L,L,H)
+        qk = shd.constrain_dims(jnp.einsum("blhd,bshd->blsh", qx, kx),
+                                {0: "batch", 1: "model"})
+        h_num = jnp.einsum("blsh,blsh,bshv->blhv", aw, qk, vx)
+        n_t = jnp.einsum("blsh,bshd->blhd", aw, kx)  # intra normaliser
+        # boundary contribution
+        bscale = jnp.exp(m_bound - m_t)  # (B,L,H)
+        h_num += jnp.einsum("blh,blhd,bhdv->blhv", bscale, qx, c0)
+        n_t += bscale[..., None] * n0[:, None, :, :]
+        den = jnp.maximum(jnp.abs(jnp.einsum("blhd,blhd->blh", qx, n_t)),
+                          jnp.exp(-m_t))
+        h_out = h_num / den[..., None]
+        # --- boundary state update -------------------------------------
+        cl = cumfx[:, -1]  # (B,H)
+        m_new = jnp.maximum(cl + m0, jnp.max(cl[:, None] - cumfx + icx, axis=1))
+        inj = jnp.exp(cl[:, None] - cumfx + icx - m_new[:, None])  # (B,L,H)
+        c_new = jnp.exp(cl + m0 - m_new)[..., None, None] * c0 + \
+            jnp.einsum("blh,blhd,blhv->bhdv", inj, kx, vx)
+        n_new = jnp.exp(cl + m0 - m_new)[..., None] * n0 + \
+            jnp.einsum("blh,blhd->bhd", inj, kx)
+        return (c_new, n_new, m_new), h_out
+
+    carry0 = (state0.c, state0.n, state0.m)
+    inputs = tuple(jnp.moveaxis(t, 1, 0) for t in (qc, kc, vc, ic, cumf))
+    (c_f, n_f, m_f), hs = jax.lax.scan(chunk_body, carry0, inputs)
+    h_seq = jnp.moveaxis(hs, 0, 1).reshape(b, seq, h, dv)
+    return h_seq, MLSTMState(c=c_f, n=n_f, m=m_f, conv=state0.conv)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (optionally spiking)
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg) -> dict:
+    d = cfg.d_model
+    h = _heads(cfg)
+    hd = d // h
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    f_up = int(d * 4 / 3)
+    p = {
+        "w_gates": jax.random.normal(ks[0], (d, 4 * d), jnp.float32) * s,
+        "r_gates": jax.random.normal(ks[1], (h, hd, 4 * hd), jnp.float32) * hd ** -0.5,
+        "b_gates": jnp.zeros((4 * d,), jnp.float32),
+        "w_ff_gate": jax.random.normal(ks[2], (d, f_up), cfg.dtype) * s,
+        "w_ff_up": jax.random.normal(ks[2], (d, f_up), cfg.dtype) * s,
+        "w_ff_down": jax.random.normal(ks[3], (f_up, d), cfg.dtype) * f_up ** -0.5,
+        "vth": jnp.ones((d,), jnp.float32),  # spiking-mode threshold
+    }
+    return p
+
+
+def _slstm_step_fn(p, cfg):
+    h = _heads(cfg)
+    hd = cfg.d_model // h
+
+    def step(carry: SLSTMState, wx_t):
+        # recurrent contribution from previous hidden (possibly spikes)
+        rh = jnp.einsum("bhd,hde->bhe", carry.h, p["r_gates"])  # (B,H,4hd)
+        g = wx_t.reshape(*wx_t.shape[:-1], h, 4 * hd) + rh
+        z_t, i_t, f_t, o_t = jnp.split(g, 4, axis=-1)
+        f_log = jax.nn.log_sigmoid(f_t)
+        m_new = jnp.maximum(f_log + carry.m, i_t)
+        i = jnp.exp(i_t - m_new)
+        f = jnp.exp(f_log + carry.m - m_new)
+        c = f * carry.c + i * jnp.tanh(z_t)
+        n = f * carry.n + i
+        membrane = c / jnp.maximum(n, 1e-6)
+        if cfg.spiking:
+            vth = p["vth"].reshape(h, hd)
+            h_new = spike_fn(membrane, vth) * jax.nn.sigmoid(o_t)
+        else:
+            h_new = jax.nn.sigmoid(o_t) * membrane
+        return SLSTMState(c=c, n=n, h=h_new, m=m_new), h_new
+
+    return step
+
+
+def slstm_block(x: jax.Array, p: dict, cfg, state: SLSTMState | None = None
+                ) -> tuple[jax.Array, SLSTMState | None]:
+    b, seq, d = x.shape
+    wx = x.astype(jnp.float32) @ p["w_gates"] + p["b_gates"]
+    step = _slstm_step_fn(p, cfg)
+    if state is None:
+        s0 = init_slstm_state(cfg, b)
+        last, hs = jax.lax.scan(step, s0, jnp.swapaxes(wx, 0, 1))
+        h_seq = jnp.swapaxes(hs, 0, 1)
+        new_state = last  # final recurrent state (prefill handoff)
+    else:
+        last, h1 = step(state, wx[:, 0])
+        h_seq = h1[:, None]
+        new_state = last
+    h_flat = h_seq.reshape(b, -1, d).astype(cfg.dtype)
+    ff = (jax.nn.silu(h_flat @ p["w_ff_gate"]) * (h_flat @ p["w_ff_up"])) @ p["w_ff_down"]
+    return ff, new_state
+
+
+def init_slstm_state(cfg, batch: int) -> SLSTMState:
+    h = _heads(cfg)
+    hd = cfg.d_model // h
+    z = jnp.zeros((batch, h, hd), jnp.float32)
+    return SLSTMState(c=z, n=z, h=z, m=jnp.full((batch, h, hd), -1e30, jnp.float32))

@@ -1,0 +1,68 @@
+"""xLSTM language model (xlstm-350m): mixed mLSTM/sLSTM block stack.
+
+Blocks are heterogeneous (matrix vs scalar memory) so the 24-layer stack is
+unrolled rather than scanned — the bodies are small at d=1024. Decode
+carries O(1) recurrent state per block, so this arch runs long_500k.
+
+With cfg.spiking=True the sLSTM blocks emit binary spikes through a
+learnable threshold (the paper's RSNN technique applied to this family).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import basic
+from repro.models.layers import xlstm as xl
+
+
+def is_slstm(cfg, i: int) -> bool:
+    return i in cfg.ssm.slstm_layers
+
+
+def init_xlstm_lm(key, cfg) -> dict:
+    kemb, klay = jax.random.split(key)
+    layers = []
+    for i, k in enumerate(jax.random.split(klay, cfg.num_layers)):
+        init = xl.init_slstm if is_slstm(cfg, i) else xl.init_mlstm
+        layers.append({"norm": basic.init_norm(cfg, cfg.d_model),
+                       "block": init(k, cfg)})
+    return {
+        "embed": basic.init_embedding(kemb, cfg),
+        "layers": layers,
+        "final_norm": basic.init_norm(cfg, cfg.d_model),
+    }
+
+
+def init_xlstm_state(cfg, batch: int) -> list:
+    return [xl.init_slstm_state(cfg, batch) if is_slstm(cfg, i)
+            else xl.init_mlstm_state(cfg, batch)
+            for i in range(cfg.num_layers)]
+
+
+def xlstm_forward(params, tokens, cfg, states: list | None = None,
+                  mode: str = "train") -> tuple[jax.Array, list | None]:
+    """states!=None => decode mode (S==1); states is the per-block carry.
+    mode='prefill' returns the final per-block states as the decode cache."""
+    mode = "decode" if states is not None else mode
+    x = basic.embed_tokens(tokens, params["embed"], cfg)
+    new_states: list[Any] = []
+    for i, lp in enumerate(params["layers"]):
+        h = basic.apply_norm(x, lp["norm"], cfg)
+        block = xl.slstm_block if is_slstm(cfg, i) else xl.mlstm_block
+        st = states[i] if states is not None else None
+        if cfg.remat == "full" and mode == "train":
+            out, ns = jax.checkpoint(
+                lambda h, bp, s=None, _b=block: _b(h, bp, cfg, s))(h, lp["block"], st)
+        else:
+            out, ns = block(h, lp["block"], cfg, st)
+        x = x + out
+        new_states.append(ns)
+    if mode == "prefill":
+        x = x[:, -1:]
+    x = basic.apply_norm(x, params["final_norm"], cfg)
+    logits = basic.unembed(x, params["embed"], cfg)
+    return logits, (new_states if mode in ("decode", "prefill") else None)

@@ -1,0 +1,185 @@
+"""Scanned-layer decoder LM.
+
+Covers the dense archs (internvl2 backbone, gemma2, yi, stablelm, gemma-7b)
+and the MLA+MoE archs (deepseek-v3, kimi-k2). Layers are weight-stacked and
+run under `jax.lax.scan` so XLA compiles ONE layer body regardless of depth
+(essential for the 61-layer MoE dry-runs); a small dense prefix (deepseek: 3,
+kimi: 1) is unrolled separately.
+
+Sliding-window flags are *data* (a scanned int32 array), so gemma2's
+local/global alternation lives inside a single homogeneous scan body.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as shd
+from repro.models.layers import basic
+from repro.models.layers import attention as attn_lib
+from repro.models.layers import mla as mla_lib
+from repro.models.layers import moe as moe_lib
+
+GLOBAL_WINDOW = jnp.int32(2 ** 30)  # "no window" sentinel (dynamic-safe)
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init / forward
+# ---------------------------------------------------------------------------
+
+
+def init_layer(key, cfg, dense_mlp: bool) -> dict:
+    """One decoder block. dense_mlp selects plain MLP vs MoE FFN."""
+    k1, k2 = jax.random.split(key)
+    p: dict[str, Any] = {"attn_norm": basic.init_norm(cfg, cfg.d_model),
+                         "mlp_norm": basic.init_norm(cfg, cfg.d_model)}
+    if cfg.mla is not None:
+        p["attn"] = mla_lib.init_mla(k1, cfg)
+    else:
+        p["attn"] = attn_lib.init_attn(k1, cfg)
+    if dense_mlp or cfg.moe is None:
+        d_ff = cfg.dense_d_ff or cfg.d_ff
+        p["mlp"] = basic.init_mlp(k2, cfg, cfg.d_model, d_ff)
+    else:
+        p["moe"] = moe_lib.init_moe(k2, cfg)
+    if cfg.sandwich_norm:
+        p["post_attn_norm"] = basic.init_norm(cfg, cfg.d_model)
+        p["post_mlp_norm"] = basic.init_norm(cfg, cfg.d_model)
+    return p
+
+
+def layer_fwd(x, lp, cfg, positions, window, cache, cache_pos, return_kv=False):
+    """One block. window: dynamic int32 scalar (GLOBAL_WINDOW = full)."""
+    x = shd.constrain_batch(x)  # pin (B,S,D): batch over data axes
+    h = basic.apply_norm(x, lp["attn_norm"], cfg)
+    if cfg.mla is not None:
+        a, new_cache = mla_lib.mla_attention(h, lp["attn"], cfg, positions,
+                                             cache, cache_pos, return_kv=return_kv)
+    else:
+        a, new_cache = attn_lib.attention(h, lp["attn"], cfg, positions,
+                                          layer_window=window, cache=cache,
+                                          cache_pos=cache_pos, return_kv=return_kv)
+    if cfg.sandwich_norm:
+        a = basic.apply_norm(a, lp["post_attn_norm"], cfg)
+    x = x + a
+
+    h = basic.apply_norm(x, lp["mlp_norm"], cfg)
+    if "moe" in lp:
+        f = moe_lib.moe_apply(h, lp["moe"], cfg)
+    else:
+        f = basic.mlp(h, lp["mlp"], cfg)
+    if cfg.sandwich_norm:
+        f = basic.apply_norm(f, lp["post_mlp_norm"], cfg)
+    return x + f, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init / forward
+# ---------------------------------------------------------------------------
+
+
+def layer_windows(cfg) -> jax.Array:
+    """Per-scanned-layer sliding windows (gemma2: even layers local)."""
+    n = cfg.num_layers - cfg.dense_layers
+    if cfg.attn_type == "local_global" and cfg.sliding_window:
+        idx = jnp.arange(cfg.dense_layers, cfg.num_layers)
+        return jnp.where(idx % 2 == 0, jnp.int32(cfg.sliding_window), GLOBAL_WINDOW)
+    return jnp.full((n,), GLOBAL_WINDOW, jnp.int32)
+
+
+def init_lm(key, cfg) -> dict:
+    n_scan = cfg.num_layers - cfg.dense_layers
+    k_emb, k_dense, k_scan = jax.random.split(key, 3)
+    params: dict[str, Any] = {"embed": basic.init_embedding(k_emb, cfg)}
+    if cfg.dense_layers:
+        keys = jax.random.split(k_dense, cfg.dense_layers)
+        params["dense_prefix"] = [init_layer(k, cfg, dense_mlp=True) for k in keys]
+    params["layers"] = jax.vmap(
+        lambda k: init_layer(k, cfg, dense_mlp=False))(jax.random.split(k_scan, n_scan))
+    params["final_norm"] = basic.init_norm(cfg, cfg.d_model)
+    return params
+
+
+class DecodeCache(NamedTuple):
+    prefix: list  # per-dense-prefix-layer cache
+    layers: Any  # scanned-layer caches, leaves stacked on axis 0
+    pos: jax.Array  # (B,) next write position
+
+
+def init_decode_cache(cfg, batch: int, max_len: int) -> DecodeCache:
+    n_scan = cfg.num_layers - cfg.dense_layers
+    if cfg.mla is not None:
+        one = lambda: mla_lib.init_mla_cache(cfg, batch, max_len)
+    else:
+        one = lambda: attn_lib.init_kv_cache(cfg, batch, max_len)
+    prefix = [one() for _ in range(cfg.dense_layers)]
+    stacked = jax.tree.map(lambda x: jnp.zeros((n_scan,) + x.shape, x.dtype), one())
+    return DecodeCache(prefix=prefix, layers=stacked,
+                       pos=jnp.zeros((batch,), jnp.int32))
+
+
+def lm_forward(params, tokens, cfg, frontend_embeds=None,
+               cache: DecodeCache | None = None, mode: str = "train"):
+    """tokens: (B, S). mode: 'train' | 'prefill' | 'decode'.
+
+    decode: cache is updated at cache.pos (S == 1).
+    prefill: per-layer post-rope K/V are collected into a fresh DecodeCache
+    and only the last position's logits are computed.
+    Returns (logits, new_cache)."""
+    if cache is not None:
+        mode = "decode"
+    b, s = tokens.shape
+    x = basic.embed_tokens(tokens, params["embed"], cfg)
+    if frontend_embeds is not None:
+        x = basic.splice_frontend_embeddings(x, frontend_embeds)
+
+    if mode == "decode":
+        positions = cache.pos[:, None]
+        cache_pos = cache.pos
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        cache_pos = None
+
+    windows = layer_windows(cfg)
+    prefill = mode == "prefill"
+
+    # --- unrolled dense prefix ---------------------------------------------
+    new_prefix = []
+    for i in range(cfg.dense_layers):
+        c = cache.prefix[i] if mode == "decode" else None
+        x, nc = layer_fwd(x, params["dense_prefix"][i], cfg, positions,
+                          GLOBAL_WINDOW, c, cache_pos, return_kv=prefill)
+        new_prefix.append(nc)
+
+    # --- scanned stack -------------------------------------------------------
+    def body(x, scanned):
+        lp, window, layer_cache = scanned
+        fwd = (lambda x_, lp_, pos_, w_, c_, cp_:
+               layer_fwd(x_, lp_, cfg, pos_, w_, c_, cp_, return_kv=prefill))
+        if cfg.remat == "full" and mode == "train":
+            fwd = jax.checkpoint(fwd)
+        x, nc = fwd(x, lp, positions, window, layer_cache, cache_pos)
+        return x, nc
+
+    if mode == "decode":
+        x, new_layer_caches = jax.lax.scan(
+            body, x, (params["layers"], windows, cache.layers))
+        new_cache = DecodeCache(prefix=new_prefix, layers=new_layer_caches,
+                                pos=cache.pos + 1)
+    else:
+        x, kvs = jax.lax.scan(lambda c, sc: body(c, (sc[0], sc[1], None)),
+                              x, (params["layers"], windows))
+        if prefill:
+            new_cache = DecodeCache(prefix=new_prefix, layers=kvs,
+                                    pos=jnp.full((b,), s, jnp.int32))
+        else:
+            new_cache = None
+
+    if prefill:
+        x = x[:, -1:]  # only the last position feeds sampling
+    x = basic.apply_norm(x, params["final_norm"], cfg)
+    logits = basic.unembed(x, params["embed"], cfg)
+    return logits, new_cache

@@ -1,0 +1,45 @@
+"""Elastic scaling: rebuild the mesh from the surviving device set and
+reshard a checkpointed state onto it.
+
+Flow on node failure: the job restarts on N' < N hosts, calls
+`make_elastic_mesh()` to build the largest (data, model) mesh the survivors
+support (model axis preserved if possible — TP degree is baked into layer
+math far less than DP is), re-derives parameter specs, and restores the
+latest checkpoint with `Checkpointer.restore` (host-side reshard). The
+global batch is kept constant by scaling per-device batch, so training
+curves are unchanged modulo data order.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.distributed import sharding as shd
+
+
+def make_elastic_mesh(preferred_model: int = 16, devices=None):
+    devices = devices if devices is not None else jax.devices()
+    n = len(devices)
+    model = preferred_model
+    while model > 1 and n % model:
+        model //= 2
+    return jax.make_mesh((n // model, model), ("data", "model"),
+                         devices=devices[: (n // model) * model])
+
+
+def reshard_state(state, mesh):
+    """Re-derive specs for `state` on `mesh` and device_put every leaf
+    (used when the restored checkpoint came from a different topology)."""
+    from jax.sharding import NamedSharding
+
+    specs = shd.tree_param_specs(state, mesh)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), state, specs,
+        is_leaf=lambda x: isinstance(x, jax.Array))
+
+
+def per_host_batch(global_batch: int, mesh) -> int:
+    """Keep the global batch constant across elastic resizes."""
+    n_data = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    assert global_batch % n_data == 0, (global_batch, n_data)
+    return global_batch // jax.process_count()

@@ -1,0 +1,36 @@
+"""Cache capacity management: grow prefill caches to decode capacity.
+
+Prefill returns caches sized exactly to the prompt; decode needs spare
+slots. `pad_cache` zero-pads every sequence-sized dim (leaves named like KV
+caches) up to `max_len`, leaving recurrent states untouched.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_SEQ_LEAF_HINTS = ("k", "v", "kv_latent", "k_rope")
+
+
+def pad_cache(cache, prompt_len: int, max_len: int):
+    if max_len <= prompt_len:
+        return cache
+
+    def pad(path, leaf):
+        if not isinstance(leaf, jax.Array) or leaf.ndim == 0:
+            return leaf
+        name = jax.tree_util.keystr(path).rsplit(".", 1)[-1].strip("]'[")
+        if name in ("k", "v"):
+            d = leaf.ndim - 3  # (..., T, H, hd)
+        elif name in ("kv_latent", "k_rope"):
+            d = leaf.ndim - 2  # (..., T, r)
+        else:
+            return leaf  # recurrent states / pos / enc_out
+        if leaf.shape[d] != prompt_len:
+            return leaf
+        widths = [(0, 0)] * leaf.ndim
+        widths[d] = (0, max_len - prompt_len)
+        return jnp.pad(leaf, widths)
+
+    return jax.tree_util.tree_map_with_path(pad, cache)

@@ -1,0 +1,170 @@
+"""The paper's full training recipe (§II-D3, §IV-A), end to end:
+
+  1. BASELINE    — hidden 256, inherent temporal training (high TS -> low TS)
+  2. +STRUCTURED — hidden 128, trained from scratch (predefined pruning [24])
+  3. +UNSTRUCT   — 40% magnitude pruning of the FC, fine-tuned with masks
+  4. +QAT        — 4-bit fixed-point weight quantization, fine-tuned
+
+Each stage reports frame-error-rate, measured sparsity (drives the
+zero-skipping cycle/complexity models), model size, and MMAC/s — the data
+behind the paper's Figs 12-18 (benchmarks/paper_tables.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import complexity, rsnn
+from repro.core.compression import (CompressionConfig, init_compression,
+                                    materializer)
+from repro.core.rsnn import RSNNConfig
+from repro.core.temporal import TemporalSchedule
+from repro.data.synthetic import SpeechDataConfig, TimitLikeStream
+from repro.training import optimizer as opt_lib
+from repro.training.optimizer import OptimizerConfig
+
+
+@dataclasses.dataclass
+class StageResult:
+    name: str
+    cfg: RSNNConfig
+    ccfg: CompressionConfig
+    params: Any
+    cstate: Any
+    error_rate: float
+    loss: float
+    sparsity: complexity.SparsityProfile
+    size_bytes: float
+    mmac_dense: float
+    mmac_skip: float
+
+
+def make_train_step(cfg: RSNNConfig, ocfg: OptimizerConfig,
+                    ccfg: CompressionConfig, cstate, num_ts: int):
+    mat = materializer(ccfg, cstate)
+
+    def train_step(state, batch):
+        def loss_fn(params):
+            return rsnn.loss_fn(params, batch, cfg, materialize=mat,
+                                num_ts=num_ts)
+
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(state["params"])
+        new_params, new_opt, metrics = opt_lib.apply_updates(
+            state["params"], grads, state["opt"], ocfg)
+        metrics = dict(metrics, loss=loss,
+                       frame_error_rate=aux["frame_error_rate"])
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def evaluate(params, cfg: RSNNConfig, ccfg: CompressionConfig, cstate,
+             stream: TimitLikeStream, batches: int = 8, batch_size: int = 32,
+             num_ts: int | None = None) -> dict:
+    mat = materializer(ccfg, cstate)
+    eval_fn = jax.jit(functools.partial(
+        rsnn.loss_fn, cfg=cfg, materialize=mat, num_ts=num_ts))
+    losses, errs = [], []
+    rates = {"l0": [], "l1": [], "union_l1": [], "in_bits": []}
+    for i in range(batches):
+        b = stream.batch(batch_size, step=10_000 + i)
+        batch = {k: jnp.asarray(v) for k, v in b.items()}
+        loss, aux = eval_fn(params, batch)
+        losses.append(float(loss))
+        errs.append(float(aux["frame_error_rate"]))
+        rates["l0"].append([float(x) for x in aux["spike_rate_l0"]])
+        rates["l1"].append([float(x) for x in aux["spike_rate_l1"]])
+        rates["union_l1"].append(float(aux["union_rate_l1"]))
+        rates["in_bits"].append(1.0 - float(aux["input_bit_sparsity"]))
+    import numpy as np
+
+    l0 = np.mean(rates["l0"], axis=0)
+    l1 = np.mean(rates["l1"], axis=0)
+    ts = len(l0)
+    sp = complexity.SparsityProfile(
+        input_bit_density=float(np.mean(rates["in_bits"])),
+        l0_density=tuple(float(x) for x in l0) if ts == 2 else (float(l0[0]),) * 2,
+        l1_density=tuple(float(x) for x in l1) if ts == 2 else (float(l1[0]),) * 2,
+        fc_density=tuple(float(x) for x in l1) if ts == 2 else (float(l1[0]),) * 2,
+        fc_union_density=float(np.mean(rates["union_l1"])),
+    )
+    return {"loss": float(np.mean(losses)), "error_rate": float(np.mean(errs)),
+            "sparsity": sp}
+
+
+def train_stage(name: str, cfg: RSNNConfig, ccfg: CompressionConfig,
+                stream: TimitLikeStream, steps: int, batch_size: int,
+                schedule: TemporalSchedule | None = None,
+                init_params: Any | None = None, lr: float = 3.5e-3,
+                eval_batches: int = 8, seed: int = 0,
+                log_every: int = 50) -> StageResult:
+    """One pipeline stage; `schedule` enables inherent temporal training."""
+    params = init_params if init_params is not None else rsnn.init_params(
+        jax.random.PRNGKey(seed), cfg)
+    cstate = init_compression(params, ccfg)
+    ocfg = OptimizerConfig(name="adamw", lr=lr, warmup_steps=max(steps // 20, 5),
+                           decay_steps=steps, weight_decay=0.0)
+    state = {"params": params, "opt": opt_lib.init_opt_state(params, ocfg)}
+
+    steps_done = 0
+    stages = schedule.stages if schedule else ((cfg.num_ts, steps),)
+    for num_ts, stage_steps in stages:
+        step_fn = jax.jit(make_train_step(cfg, ocfg, ccfg, cstate, num_ts),
+                          donate_argnums=(0,))
+        for i in range(stage_steps):
+            b = stream.batch(batch_size, step=steps_done + i)
+            batch = {k: jnp.asarray(v) for k, v in b.items()}
+            state, metrics = step_fn(state, batch)
+            if (steps_done + i) % log_every == 0:
+                print(f"[{name}] ts={num_ts} step {steps_done+i} "
+                      f"loss={float(metrics['loss']):.4f} "
+                      f"fer={float(metrics['frame_error_rate']):.4f}")
+        steps_done += stage_steps
+
+    ev = evaluate(state["params"], cfg, ccfg, cstate, stream,
+                  batches=eval_batches, batch_size=batch_size)
+    from repro.core.compression import compressed_size_bytes
+
+    size = compressed_size_bytes(state["params"], ccfg, cstate)
+    return StageResult(
+        name=name, cfg=cfg, ccfg=ccfg, params=state["params"], cstate=cstate,
+        error_rate=ev["error_rate"], loss=ev["loss"], sparsity=ev["sparsity"],
+        size_bytes=size,
+        mmac_dense=complexity.mmac_per_second(cfg, cfg.num_ts,
+                                              fc_prune_frac=ccfg.fc_prune_frac),
+        mmac_skip=complexity.mmac_per_second(cfg, cfg.num_ts,
+                                             sparsity=ev["sparsity"],
+                                             merged_spike=True,
+                                             fc_prune_frac=ccfg.fc_prune_frac))
+
+
+def run_pipeline(steps: int = 300, batch_size: int = 32,
+                 hidden_base: int = 256, hidden_pruned: int = 128,
+                 data_cfg: SpeechDataConfig | None = None,
+                 temporal: bool = True, seed: int = 0) -> list[StageResult]:
+    """The paper's four-stage recipe. `steps` is per stage (paper: 72 epochs)."""
+    stream = TimitLikeStream(data_cfg or SpeechDataConfig())
+    base_cfg = RSNNConfig(hidden_dim=hidden_base, num_ts=2)
+    pruned_cfg = RSNNConfig(hidden_dim=hidden_pruned, num_ts=2)
+    none = CompressionConfig()
+    sched = TemporalSchedule(stages=((4, steps // 3), (2, steps - steps // 3))) \
+        if temporal else None
+
+    results = [train_stage("baseline", base_cfg, none, stream, steps,
+                           batch_size, schedule=sched, seed=seed)]
+    results.append(train_stage("structured", pruned_cfg, none, stream, steps,
+                               batch_size, schedule=sched, seed=seed + 1))
+    unstruct = CompressionConfig(fc_prune_frac=0.4)
+    results.append(train_stage("unstructured", pruned_cfg, unstruct, stream,
+                               steps, batch_size,
+                               init_params=results[-1].params, seed=seed))
+    qat = CompressionConfig(fc_prune_frac=0.4, weight_bits=4)
+    results.append(train_stage("qat4", pruned_cfg, qat, stream, steps,
+                               batch_size, init_params=results[-1].params,
+                               seed=seed))
+    return results

@@ -1,0 +1,89 @@
+"""The paper's headline numbers, reproduced EXACTLY by the analytical
+accounting (Table I, Figs 2, 12, 13, 17)."""
+
+import pytest
+
+from repro.core import complexity as C
+from repro.core.rsnn import RSNNConfig
+
+BASE = RSNNConfig(hidden_dim=256)
+PRUNED = RSNNConfig(hidden_dim=128)
+
+
+def test_param_counts_table1():
+    assert BASE.num_params == 698368
+    assert PRUNED.num_params == 300032
+    # +unstructured 40% FC pruning
+    assert C.num_params(PRUNED, fc_prune_frac=0.4) == 201728
+
+
+def test_model_sizes_fig12():
+    assert C.model_size_bytes(BASE, 32) == pytest.approx(2.79e6, rel=0.01)
+    assert C.model_size_bytes(PRUNED, 32) == pytest.approx(1.20e6, rel=0.01)
+    assert C.model_size_bytes(PRUNED, 32, 0.4) == pytest.approx(0.81e6, rel=0.01)
+    # 4-bit: 0.1 MB, total reduction 96.42%
+    final = C.model_size_bytes(PRUNED, 4, 0.4)
+    assert final == pytest.approx(0.1e6, rel=0.01)
+    assert 1 - final / C.model_size_bytes(BASE, 32) == pytest.approx(0.9642, abs=0.001)
+
+
+def test_mmac_fig13():
+    assert C.mmac_per_second(BASE, 2) == pytest.approx(145.8, abs=0.1)
+    assert C.mmac_per_second(PRUNED, 2) == pytest.approx(63.08, abs=0.01)
+    assert C.mmac_per_second(PRUNED, 1) == pytest.approx(33.59, abs=0.01)
+
+
+def test_weight_access_dataflow():
+    # §II-C: layer-based 1.458 M vs time-step-unfolded 0.77 M
+    assert C.weight_accesses_per_frame(BASE, 2, parallel_time_steps=False) \
+        == pytest.approx(1.458e6, rel=0.01)
+    assert C.weight_accesses_per_frame(BASE, 2, parallel_time_steps=True) \
+        == pytest.approx(0.77e6, rel=0.01)
+
+
+def test_cycles_fig17_dense():
+    assert C.cycles_per_frame(PRUNED, 2) == 2464
+    assert C.cycles_per_frame(PRUNED, 1) == 1312
+
+
+def test_cycles_fig17_skip_and_merge():
+    sp = C.SparsityProfile()  # paper's operating point
+    # type-D: no skip on recurrent layers in 2-ts mode
+    c2 = C.cycles_per_frame(PRUNED, 2, sparsity=sp)
+    assert abs(c2 - 1224) < 80
+    c1 = C.cycles_per_frame(PRUNED, 1, sparsity=sp)
+    assert abs(c1 - 574) < 80
+    cm = C.cycles_per_frame(PRUNED, 2, sparsity=sp, merged_spike=True)
+    assert abs(cm - 895) < 30
+    # real-time at ~100 kHz (paper: 895 cycles / 10 ms)
+    assert C.realtime_frequency_hz(cm) < 100_000
+
+
+def test_mmac_with_skip_trends():
+    sp = C.SparsityProfile()
+    skip = C.mmac_per_second(PRUNED, 2, sparsity=sp)
+    merged = C.mmac_per_second(PRUNED, 2, sparsity=sp, merged_spike=True)
+    assert abs(skip - 24.48) < 1.5   # paper: 24.48 (sparsity-dependent)
+    assert abs(merged - 16.01) < 1.5  # paper: 16.01
+    assert merged < skip < C.mmac_per_second(PRUNED, 2)
+    one = C.mmac_per_second(PRUNED, 1, sparsity=sp)
+    assert abs(one - 13.86) < 1.5    # paper: 13.86, -90.49% vs baseline
+    assert 1 - one / C.mmac_per_second(BASE, 2) > 0.89
+
+
+def test_power_model_reproduces_paper_points():
+    # the two published operating points (Fig. 19)
+    assert C.power_w(100e3) == pytest.approx(71.2e-6, rel=1e-6)
+    assert C.power_w(500e6) == pytest.approx(35.5e-3, rel=1e-6)
+    # Table III: 63.5 nJ/frame at 500 MHz with 895-cycle merged-spike frames
+    assert C.energy_per_frame_j(895, 500e6) == pytest.approx(63.5e-9, rel=0.01)
+    # always-on point: 71.2 uW x 8.95 ms
+    assert C.energy_per_frame_j(895, 100e3) == pytest.approx(71.2e-6 * 8.95e-3,
+                                                             rel=0.01)
+
+
+def test_tops_per_watt_band():
+    sp = C.SparsityProfile()
+    tw = C.tops_per_watt(PRUNED, 2, sparsity=sp)
+    # paper: 28.41 TOPS/W; dense-equivalent convention brackets it
+    assert 5.0 < tw < 60.0

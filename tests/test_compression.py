@@ -1,0 +1,93 @@
+"""Property-based tests for the compression stack (hypothesis)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compression import (CompressionConfig, init_compression,
+                                    materializer, compressed_size_bytes,
+                                    pruning, quantization)
+from repro.core.compression.quantization import QuantSpec
+
+
+@settings(max_examples=25, deadline=None)
+@given(rows=st.integers(4, 64), cols=st.integers(4, 64),
+       frac=st.floats(0.0, 0.9), seed=st.integers(0, 2**31 - 1))
+def test_magnitude_mask_properties(rows, cols, frac, seed):
+    w = np.random.default_rng(seed).normal(size=(rows, cols)).astype(np.float32)
+    m = np.asarray(pruning.magnitude_prune_mask(jnp.asarray(w), frac))
+    assert set(np.unique(m)) <= {0.0, 1.0}
+    kept = int(m.sum())
+    # keeps ~ (1-frac) (ties can keep a few more)
+    assert kept >= max(1, int(round(w.size * (1 - frac))) - 1)
+    # every kept weight's |w| >= every dropped weight's |w| (up to ties)
+    if kept < w.size:
+        assert np.abs(w)[m == 1].min() >= np.abs(w)[m == 0].max() - 1e-6
+
+
+@settings(max_examples=25, deadline=None)
+@given(bits=st.sampled_from([2, 4, 8]), seed=st.integers(0, 2**31 - 1),
+       per_channel=st.booleans())
+def test_fake_quant_error_bound(bits, seed, per_channel):
+    w = np.random.default_rng(seed).normal(size=(32, 16)).astype(np.float32)
+    spec = QuantSpec(bits=bits,
+                     granularity="per_channel" if per_channel else "per_tensor")
+    q = np.asarray(quantization.fake_quant(jnp.asarray(w), spec))
+    # error bounded by half a quantization step
+    if per_channel:
+        amax = np.abs(w).max(0, keepdims=True)
+    else:
+        amax = np.abs(w).max()
+    step = amax / (2.0 ** (bits - 1) - 1)
+    assert np.all(np.abs(q - w) <= step / 2 + 1e-6)
+    # grid size respected
+    uniq = len(np.unique(np.round((q / (step + 1e-12)), 3)))
+    assert uniq <= 2 ** bits * (16 if per_channel else 1)
+
+
+@settings(max_examples=20, deadline=None)
+@given(k=st.integers(1, 32), n=st.integers(1, 32), seed=st.integers(0, 2**31 - 1))
+def test_int4_pack_roundtrip(k, n, seed):
+    q = np.random.default_rng(seed).integers(-8, 8, size=(2 * k, n)).astype(np.int8)
+    packed = quantization.pack_int4(jnp.asarray(q))
+    assert packed.shape == (k, n)
+    out = np.asarray(quantization.unpack_int4(packed))
+    np.testing.assert_array_equal(out, q)
+
+
+def test_nm_prune_mask():
+    w = jnp.asarray(np.random.default_rng(0).normal(size=(16, 8)), jnp.float32)
+    m = np.asarray(pruning.nm_prune_mask(w, 2, 4))
+    assert m.shape == (16, 8)
+    groups = m.reshape(4, 4, 8).sum(axis=1)
+    np.testing.assert_array_equal(groups, 2)  # exactly 2 of every 4 kept
+
+
+def test_quantization_straight_through_grad():
+    w = jnp.asarray(np.linspace(-1, 1, 32).reshape(8, 4), jnp.float32)
+    g = jax.grad(lambda w: quantization.fake_quant(w).sum())(w)
+    np.testing.assert_allclose(np.asarray(g), 1.0)  # STE passes grad
+
+
+def test_pipeline_size_accounting_matches_paper_ratio():
+    from repro.core.rsnn import RSNNConfig, init_params
+    cfg = RSNNConfig(hidden_dim=128)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    ccfg = CompressionConfig(fc_prune_frac=0.4, weight_bits=4)
+    cstate = init_compression(params, ccfg)
+    assert compressed_size_bytes(params, ccfg, cstate) == 100864.0  # 0.1 MB
+
+
+def test_materializer_masks_and_quantizes():
+    from repro.core.rsnn import RSNNConfig, init_params
+    cfg = RSNNConfig(hidden_dim=16, fc_dim=24, input_dim=8)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    ccfg = CompressionConfig(fc_prune_frac=0.5, weight_bits=4)
+    cstate = init_compression(params, ccfg)
+    eff = materializer(ccfg, cstate)(params)
+    m = np.asarray(cstate.masks["fc_w"])
+    assert np.all(np.asarray(eff["fc_w"])[m == 0] == 0.0)
+    # quantized: few unique values per channel
+    col = np.asarray(eff["l0_wh"])[:, 0]
+    assert len(np.unique(col)) <= 16

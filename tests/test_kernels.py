@@ -1,0 +1,111 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.core.compression import quantization
+
+
+def _pack(q):
+    return ((q[0::2] & 0xF) | ((q[1::2] & 0xF) << 4)).astype(jnp.int8)
+
+
+@pytest.mark.parametrize("ts", [1, 2, 4])
+@pytest.mark.parametrize("b,h", [(128, 128), (256, 128), (128, 256), (512, 128)])
+def test_rsnn_cell_sweep(ts, b, h):
+    rng = np.random.default_rng(ts * 1000 + b + h)
+    stim = jnp.asarray(rng.normal(size=(ts, b, h)), jnp.float32)
+    s_prev = jnp.asarray(rng.integers(0, 2, (ts, b, h)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(h, h)) * 0.1, jnp.float32)
+    u0 = jnp.asarray(rng.normal(size=(b, h)), jnp.float32)
+    h0 = jnp.asarray(rng.integers(0, 2, (b, h)), jnp.float32)
+    beta = jnp.asarray(rng.uniform(0.5, 0.99, h), jnp.float32)
+    vth = jnp.asarray(rng.uniform(0.5, 1.5, h), jnp.float32)
+    sp_k, u_k = ops.rsnn_cell(stim, s_prev, w, u0, h0, beta, vth)
+    sp_r, u_r = ref.rsnn_cell_ref(stim, s_prev, w, u0, h0, beta, vth)
+    np.testing.assert_array_equal(np.asarray(sp_k), np.asarray(sp_r))
+    np.testing.assert_allclose(np.asarray(u_k), np.asarray(u_r), rtol=2e-5, atol=2e-5)
+
+
+def test_rsnn_cell_matches_core_lif():
+    """Kernel semantics == repro.core.lif chain (the model's ground truth)."""
+    from repro.core import lif as L
+    rng = np.random.default_rng(7)
+    b, h = 128, 128
+    stim = jnp.asarray(rng.normal(size=(2, b, h)), jnp.float32)
+    params = L.LIFParams(raw_beta=jnp.asarray(rng.normal(size=h), jnp.float32),
+                         raw_vth=jnp.asarray(rng.normal(size=h), jnp.float32))
+    st = L.LIFState(u=jnp.asarray(rng.normal(size=(b, h)), jnp.float32),
+                    spike=jnp.asarray(rng.integers(0, 2, (b, h)), jnp.float32))
+    # core chain
+    s_core = []
+    cur = st
+    for t in range(2):
+        cur, hh = L.lif_step(params, cur, stim[t])
+        s_core.append(hh)
+    # kernel with zero recurrent weight (isolates the LIF chain)
+    sp_k, u_k = ops.rsnn_cell(stim, jnp.zeros_like(stim), jnp.zeros((h, h)),
+                              st.u, st.spike, L.beta_of(params), L.vth_of(params))
+    np.testing.assert_array_equal(np.asarray(sp_k), np.asarray(jnp.stack(s_core)))
+    np.testing.assert_allclose(np.asarray(u_k), np.asarray(cur.u), rtol=2e-5)
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 256, 128), (256, 1024, 256),
+                                   (128, 512, 1920 // 15 * 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_int4_matmul_sweep(m, k, n, dtype):
+    rng = np.random.default_rng(m + k + n)
+    x = jnp.asarray(rng.normal(size=(m, k)), dtype)
+    q = jnp.asarray(rng.integers(-8, 8, (k, n)), jnp.int8)
+    scale = jnp.asarray(rng.uniform(0.01, 0.1, n), jnp.float32)
+    o_k = ops.int4_matmul(x, _pack(q), scale)
+    o_r = ref.int4_matmul_ref(x, _pack(q), scale)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("ts,b,h,n", [(2, 128, 128, 1920), (1, 128, 128, 256),
+                                      (2, 256, 256, 512)])
+def test_merged_spike_fc_sweep(ts, b, h, n):
+    rng = np.random.default_rng(ts + b + h + n)
+    s = jnp.asarray(rng.integers(0, 2, (ts, b, h)), jnp.float32)
+    q = jnp.asarray(rng.integers(-8, 8, (h, n)), jnp.int8)
+    scale = jnp.asarray(rng.uniform(0.01, 0.1, n), jnp.float32)
+    o_k = ops.merged_spike_fc(s, _pack(q), scale)
+    o_r = ref.merged_spike_fc_ref(s, _pack(q), scale)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r), rtol=1e-4, atol=1e-4)
+
+
+def test_merged_fc_equals_quantized_core_fc():
+    """Kernel path == core merged_spike_fc on dequantized weights."""
+    from repro.core import spike_ops
+    rng = np.random.default_rng(3)
+    s = jnp.asarray(rng.integers(0, 2, (2, 128, 128)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(128, 256)), jnp.float32)
+    qv, scale = quantization.quantize_to_int(w, quantization.QuantSpec(bits=4))
+    packed = quantization.pack_int4(qv)
+    o_k = ops.merged_spike_fc(s, packed, scale[0])
+    o_core = spike_ops.merged_spike_fc(s, qv.astype(jnp.float32) * scale)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_core), rtol=1e-4,
+                               atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(bt=st.integers(1, 4), seed=st.integers(0, 2**31 - 1))
+def test_rsnn_cell_hypothesis(bt, seed):
+    rng = np.random.default_rng(seed)
+    b, h = 128 * bt, 128
+    stim = jnp.asarray(rng.normal(size=(2, b, h)), jnp.float32)
+    s_prev = jnp.asarray(rng.integers(0, 2, (2, b, h)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(h, h)) * 0.05, jnp.float32)
+    z = jnp.zeros((b, h))
+    beta = jnp.full((h,), 0.9)
+    vth = jnp.full((h,), 1.0)
+    sp_k, u_k = ops.rsnn_cell(stim, s_prev, w, z, z, beta, vth)
+    sp_r, u_r = ref.rsnn_cell_ref(stim, s_prev, w, z, z, beta, vth)
+    np.testing.assert_array_equal(np.asarray(sp_k), np.asarray(sp_r))
+    np.testing.assert_allclose(np.asarray(u_k), np.asarray(u_r), rtol=2e-5, atol=2e-5)

