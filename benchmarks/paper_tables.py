@@ -157,6 +157,38 @@ def bench_rsnn_forward():
                 "realtime_streams_cpu": int(frames / (us / 1e6) / 100)}
 
 
+def bench_stream_engine():
+    """Streaming compressed-RSNN engine: batched frames/s and the measured
+    zero-skip MMAC/s of the served traffic (serving/stream.py)."""
+    from repro.core.compression.compress import (CompressionConfig,
+                                                 init_compression)
+    from repro.serving.stream import CompiledRSNN, EngineConfig
+
+    cfg = PRUNED
+    params = rsnn.init_params(jax.random.PRNGKey(0), cfg)
+    ccfg = CompressionConfig(fc_prune_frac=0.4, weight_bits=4)
+    engine = CompiledRSNN(cfg, params,
+                          EngineConfig(precision="int4", input_scale=0.05),
+                          ccfg=ccfg, cstate=init_compression(params, ccfg))
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 100, 40))
+    state = engine.init_state(8)
+
+    def run(x):
+        return engine.run(x, state)[0]
+
+    us = time_us(run, x, iters=5)
+    logits, _, aux = engine.run(x, state)
+    frames = 8 * 100
+    spikes_l1 = float(aux["spikes_l1"].sum())
+    return us, {
+        "path": "int4 packed, jnp oracle backend",
+        "us_per_frame": round(us / frames, 2),
+        "realtime_streams_cpu": int(frames / (us / 1e6) / C.FRAMES_PER_SECOND),
+        "l1_spike_density": round(
+            spikes_l1 / (frames * cfg.num_ts * cfg.hidden_dim), 4),
+    }
+
+
 def bench_kernels():
     from repro.kernels import ref as kref
     rng = np.random.default_rng(0)

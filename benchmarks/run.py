@@ -32,6 +32,8 @@ def main() -> None:
     _emit("bench_rsnn_forward", us, d)
     us, d = T.bench_kernels()
     _emit("bench_merged_spike_fc", us, d)
+    us, d = T.bench_stream_engine()
+    _emit("bench_stream_engine", us, d)
 
     # roofline summary (reads results/dryrun)
     try:

@@ -120,20 +120,29 @@ def _dot_flops(line: str, symtab: dict[str, float]) -> float:
         return 0.0
     out_elems = _shape_elems(out_m.group(2))
     lhs_c = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
-    # operand shapes: find the first operand name and its dims via symtab
+    # lhs shape: newer XLA prints typed operands inline
+    # (``dot(f32[128,256]{1,0} %x, ...)``); older text has bare names whose
+    # shapes live in the symtab. Support both.
     args = re.search(r"\b(?:dot|custom-call)\(([^)]*)\)", line)
     contract = 1
-    if lhs_c and args:
-        ops = [a.strip().lstrip("%") for a in args.group(1).split(",")]
-        lhs = symtab.get(ops[0])
-        if lhs is not None:
+    lhs = None
+    if args:
+        argtxt = args.group(1)
+        inline = _SHAPE_RE.findall(argtxt)
+        if inline:
+            lhs = (inline[0][0],
+                   tuple(int(x) for x in inline[0][1].split(",") if x))
+        else:
+            names = re.findall(r"%?([\w\.\-]+)", argtxt)
+            if names:
+                lhs = symtab.get(names[0])
+    if lhs is not None:
+        if lhs_c:
             for i in lhs_c.group(1).split(","):
                 if i:
                     contract *= lhs[1][int(i)]
-    elif args:  # custom-call matmul: infer K as last dim of first operand
-        ops = [a.strip().lstrip("%") for a in args.group(1).split(",")]
-        lhs = symtab.get(ops[0])
-        contract = lhs[1][-1] if lhs and lhs[1] else 1
+        elif lhs[1]:  # custom-call matmul: K = last dim of first operand
+            contract = lhs[1][-1]
     return 2.0 * out_elems * contract
 
 

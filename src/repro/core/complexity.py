@@ -47,6 +47,58 @@ class SparsityProfile:
     fc_union_density: float = 0.46  # OR of the two ts spike trains (merged)
 
 
+@dataclasses.dataclass
+class SparsityCounters:
+    """Running spike/bit counters measured by the streaming engine.
+
+    ``serving/stream.py`` accumulates one update per processed frame (per
+    active slot); ``profile()`` converts the totals into the
+    ``SparsityProfile`` densities that drive the zero-skip MMAC/s accounting
+    above — the measured counterpart of the paper's Fig. 18 operating point.
+    """
+
+    num_ts: int
+    hidden_dim: int
+    input_dim: int
+    input_bits: int
+    frames: float = 0.0  # active stream-frames seen
+    spikes_l0: list = dataclasses.field(init=False)  # per-ts running totals
+    spikes_l1: list = dataclasses.field(init=False)
+    union_l1: float = 0.0
+    input_one_bits: float = 0.0
+
+    def __post_init__(self):
+        self.spikes_l0 = [0.0] * self.num_ts
+        self.spikes_l1 = [0.0] * self.num_ts
+
+    def update(self, aux: dict, active_frames: float) -> None:
+        """aux: per-slot counter arrays from one engine step, already reduced
+        over the active slots (python floats / 0-d arrays)."""
+        self.frames += active_frames
+        for ts in range(self.num_ts):
+            self.spikes_l0[ts] += float(aux["spikes_l0"][ts])
+            self.spikes_l1[ts] += float(aux["spikes_l1"][ts])
+        self.union_l1 += float(aux["union_l1"])
+        self.input_one_bits += float(aux["input_one_bits"])
+
+    def profile(self) -> SparsityProfile:
+        denom = max(self.frames, 1.0) * self.hidden_dim
+        l0 = tuple(s / denom for s in self.spikes_l0)
+        l1 = tuple(s / denom for s in self.spikes_l1)
+        bit_denom = max(self.frames, 1.0) * self.input_dim * self.input_bits
+        return SparsityProfile(
+            input_bit_density=self.input_one_bits / bit_denom,
+            l0_density=l0, l1_density=l1, fc_density=l1,
+            fc_union_density=self.union_l1 / denom)
+
+    def mmac_per_second(self, cfg: RSNNConfig, merged_spike: bool = True,
+                        fc_prune_frac: float = 0.0) -> float:
+        """Measured-sparsity MMAC/s (the paper's 13.86 MMAC/s style figure)."""
+        return mmac_per_second(cfg, self.num_ts, sparsity=self.profile(),
+                               merged_spike=merged_spike,
+                               fc_prune_frac=fc_prune_frac)
+
+
 def model_size_bytes(cfg: RSNNConfig, weight_bits: int = 32,
                      fc_prune_frac: float = 0.0) -> float:
     """Weight storage in bytes. fc_prune_frac = unstructured-pruned fraction

@@ -17,4 +17,5 @@ from repro.core.compression.compress import (  # noqa: F401
     init_compression,
     materializer,
     compressed_size_bytes,
+    pack_for_inference,
 )

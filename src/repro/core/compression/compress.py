@@ -57,6 +57,19 @@ def materializer(ccfg: CompressionConfig, cstate: CompressionState):
     return mat
 
 
+def pack_for_inference(params: dict, cfg, ccfg: CompressionConfig,
+                       cstate: CompressionState):
+    """Deployment handoff: masks + int4 + CSC packing via core.sparse.
+
+    Returns the ``PackedRSNN`` artifact the streaming engine
+    (serving/stream.py) executes; dequantizing it reproduces this module's
+    ``materializer`` output bit-exactly.
+    """
+    from repro.core import sparse  # local import: sparse depends on compress
+
+    return sparse.pack_model(params, cfg, ccfg, cstate)
+
+
 def compressed_size_bytes(params: dict, ccfg: CompressionConfig,
                           cstate: CompressionState) -> float:
     """Deployed weight storage: nonzero weights at weight_bits each.

@@ -68,6 +68,15 @@ def vth_of(params: LIFParams) -> jax.Array:
     return jax.nn.softplus(params.raw_vth)
 
 
+def inference_constants(params: LIFParams, hw_rounded: bool = False
+                        ) -> tuple[jax.Array, jax.Array]:
+    """Concrete (beta, vth) for inference; pow-2-rounded on the hw path."""
+    beta, vth = beta_of(params), vth_of(params)
+    if hw_rounded:
+        beta, vth = round_beta_pow2(beta), round_vth_pow2(vth)
+    return beta, vth
+
+
 # ---------------------------------------------------------------------------
 # Surrogate-gradient spike
 # ---------------------------------------------------------------------------
@@ -116,11 +125,7 @@ def lif_step(params: LIFParams, state: LIFState, stimulus: jax.Array,
     shift-add inference hardware (paper §III-C). Rounding uses
     straight-through estimators so it is also usable late in QAT.
     """
-    beta = beta_of(params)
-    vth = vth_of(params)
-    if hw_rounded:
-        beta = round_beta_pow2(beta)
-        vth = round_vth_pow2(vth)
+    beta, vth = inference_constants(params, hw_rounded)
     # Leak of the previous membrane, reset-by-subtraction-to-zero on spike
     # (Fig. 6 multiplexer resets U when the previous spike fired).
     u = stimulus + beta * state.u * (1.0 - state.spike)

@@ -44,6 +44,17 @@ def quantize_input(x: jax.Array, bits: int = 8, scale: jax.Array | None = None
     return q, scale
 
 
+def bitplanes(q: jax.Array, bits: int = 8) -> jax.Array:
+    """Bit-plane expansion of integer-valued ``q``: (..., bits) in {0, 1}.
+
+    The bit-serial convention of the paper's input layer: magnitude bits of
+    the fixed-point value (sign handled by the accumulate direction).
+    """
+    mag = jnp.abs(q).astype(jnp.int32)
+    shifts = jnp.arange(bits, dtype=jnp.int32)
+    return (mag[..., None] >> shifts) & 1
+
+
 def input_bit_sparsity(q: jax.Array, bits: int = 8) -> jax.Array:
     """Fraction of zero bits in the two's-complement magnitude of ``q``.
 
@@ -51,10 +62,7 @@ def input_bit_sparsity(q: jax.Array, bits: int = 8) -> jax.Array:
     processed bit-serially and zero bits are skipped, so the effective MAC
     count scales with the *bit*-level density.
     """
-    mag = jnp.abs(q).astype(jnp.int32)
-    shifts = jnp.arange(bits, dtype=jnp.int32)
-    bitplanes = (mag[..., None] >> shifts) & 1
-    return 1.0 - bitplanes.mean()
+    return 1.0 - bitplanes(q, bits).mean()
 
 
 def spike_sparsity(spikes: jax.Array) -> jax.Array:

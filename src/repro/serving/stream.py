@@ -1,0 +1,398 @@
+"""Streaming compressed-RSNN inference engine (frames -> slots -> state).
+
+This is the serving path for the paper's actual workload: always-on speech
+recognition over 10-ms audio frames from a pruned/int4 0.1 MB model — the
+recurrent-state analogue of the token-LM continuous batching in
+``serving/engine.py``.
+
+Lifecycle
+---------
+1. **Frames.** Audio arrives as per-utterance feature sequences
+   ``(T, input_dim)``.  Features are quantized to the 8-bit fixed-point
+   input format with a *static* calibrated scale (hardware has no per-chunk
+   calibration), so chunked streaming is bit-identical to a one-shot pass.
+2. **Slots.** ``StreamLoop`` packs N concurrent utterances into a fixed
+   decode batch of ``batch_slots`` slots.  Every engine step advances each
+   active slot by one frame; a finished slot has its recurrent state zeroed
+   (``reset_slot``) and is refilled from the queue without stopping the
+   batch — continuous batching with membrane potentials instead of KV rows.
+3. **State.** ``CompiledRSNN`` carries ``RSNNState`` (per-ts spikes + LIF
+   membrane chain) across frames; parity with ``core.rsnn.forward`` over the
+   concatenated utterance is the engine's correctness contract
+   (tests/test_stream.py).
+
+Execution paths (``EngineConfig``): ``backend`` selects per-layer between
+the fused Pallas kernels (``kernels/ops``) and the jnp oracles
+(``kernels/ref``); ``precision`` selects float weights or the packed int4
+model from ``core/sparse.py``; ``sparse_fc`` additionally routes the pruned
+FC through the zero-skipping CSC gather.
+
+Sparsity counters -> MMAC/s
+---------------------------
+Each step emits per-slot spike/bit counters (L0/L1 per-ts spike counts, the
+merged-spike union count, input one-bits).  ``StreamLoop`` accumulates them
+over *active* slots only into ``core.complexity.SparsityCounters``, whose
+``profile()`` is the measured ``SparsityProfile`` and whose
+``mmac_per_second()`` evaluates the paper's zero-skip complexity table
+(Fig. 13 / the 13.86 MMAC/s operating point) on live traffic instead of the
+published Fig. 18 constants.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import complexity, rsnn, sparse, spike_ops
+from repro.core import lif as lif_lib
+from repro.core.compression.compress import (CompressionConfig,
+                                             CompressionState,
+                                             init_compression)
+from repro.core.lif import LIFState
+from repro.core.rsnn import RSNNConfig, RSNNState
+from repro.kernels import ops, ref
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Execution-path selection for CompiledRSNN."""
+
+    backend: str = "jnp"  # "jnp" (kernels/ref oracles) | "pallas" (fused)
+    precision: str = "float"  # "float" | "int4" (packed model from sparse.py)
+    sparse_fc: bool = False  # zero-skip CSC gather for the pruned FC (jnp)
+    input_scale: float | jax.Array | None = None  # static 8-bit calibration
+
+    def __post_init__(self):
+        if self.backend not in ("jnp", "pallas"):
+            raise ValueError(f"unknown backend {self.backend!r}")
+        if self.precision not in ("float", "int4"):
+            raise ValueError(f"unknown precision {self.precision!r}")
+        if self.sparse_fc and (self.precision != "int4"
+                               or self.backend != "jnp"):
+            raise ValueError("sparse_fc is the jnp zero-skip path over the "
+                             "int4 model (precision='int4', backend='jnp')")
+
+
+def calibrate_input_scale(features: jax.Array, bits: int = 8) -> jax.Array:
+    """Static input quantization scale from calibration audio (max-abs)."""
+    return spike_ops.quantize_input(features, bits)[1]
+
+
+def reset_slot(state: RSNNState, i: int) -> RSNNState:
+    """Zero one slot's recurrent state (fresh utterance boundary)."""
+
+    def zl(s: LIFState) -> LIFState:
+        return LIFState(u=s.u.at[i].set(0.0), spike=s.spike.at[i].set(0.0))
+
+    return RSNNState(h0=state.h0.at[:, i].set(0.0),
+                     h1=state.h1.at[:, i].set(0.0),
+                     lif0=zl(state.lif0), lif1=zl(state.lif1))
+
+
+class CompiledRSNN:
+    """One RSNN compiled for streaming inference on a chosen execution path.
+
+    Owns the (possibly packed) weights, the static input scale, and a jitted
+    per-frame step; state threads through explicitly so callers control the
+    frame/slot lifecycle.
+    """
+
+    def __init__(self, cfg: RSNNConfig, params: dict,
+                 engine: EngineConfig = EngineConfig(),
+                 ccfg: CompressionConfig | None = None,
+                 cstate: CompressionState | None = None):
+        self.cfg = cfg
+        self.engine = engine
+        self.packed: sparse.PackedRSNN | None = None
+
+        if engine.precision == "int4":
+            if ccfg is None or ccfg.quant_spec is None:
+                raise ValueError("int4 precision needs a CompressionConfig "
+                                 "with weight_bits set")
+            if cstate is None:
+                cstate = init_compression(params, ccfg)
+            self.packed = sparse.pack_model(params, cfg, ccfg, cstate)
+            if engine.sparse_fc and "fc_w" not in self.packed.sparse:
+                raise ValueError("sparse_fc needs an unstructured-pruned "
+                                 "fc_w (set ccfg.fc_prune_frac > 0)")
+            missing = set(cfg.layer_shapes) - set(self.packed.quant)
+            if missing:
+                raise ValueError(
+                    f"int4 engine needs every layer weight quantized; "
+                    f"missing from ccfg.quant_names: {sorted(missing)}")
+            # dense-dequant copies only where the engine consumes dense
+            # weights: the recurrent cell always does (paper type-D: no skip
+            # at TS=2); the jnp backend's feedforward stimulus does too.
+            # Dequant is bit-exact with QAT fake-quant.
+            dense_needed = {"l0_wh", "l1_wh"}
+            if engine.backend == "jnp":
+                dense_needed |= {"l0_wx", "l1_wx"}
+            self._w = {n: sparse.dequantize(self.packed.quant[n])
+                       for n in dense_needed}
+            self._lif = self.packed.lif
+        else:
+            self._w = {n: params[n] for n in cfg.layer_shapes}
+            self._lif = {}
+            for i in (0, 1):
+                beta, vth = lif_lib.inference_constants(params[f"lif{i}"],
+                                                        cfg.hw_rounded_lif)
+                self._lif[f"beta{i}"] = beta
+                self._lif[f"vth{i}"] = vth
+
+        # deployed FC pruning fraction, for measured-MMAC/s accounting
+        self.fc_prune_frac = (ccfg.fc_prune_frac
+                              if engine.precision == "int4" else 0.0)
+        scale = engine.input_scale
+        self._input_scale = None if scale is None else jnp.asarray(scale)
+        self._step = jax.jit(self._frame_step)
+        self._run = jax.jit(self._run_scan)
+
+    # ------------------------------------------------------------ frontend
+
+    def init_state(self, batch: int) -> RSNNState:
+        if self.engine.backend == "pallas":
+            # MXU tiling contract of the fused kernels: a batch over 128
+            # must be a multiple of the 128-row block (rsnn_cell's b-grid;
+            # the int4 path also folds TS into the matmul M dim).
+            dims = [("batch", batch)]
+            if self.packed is not None:
+                dims.append(("num_ts*batch", self.cfg.num_ts * batch))
+            for what, m in dims:
+                if m > 128 and m % 128 != 0:
+                    raise ValueError(
+                        f"pallas backend needs {what} <= 128 or a multiple "
+                        f"of 128, got {m}; use backend='jnp' or pad the "
+                        f"slot count")
+        return rsnn.init_state(self.cfg, batch)
+
+    def quantize_features(self, x: jax.Array) -> jax.Array:
+        """8-bit fixed-point input quantization with the static scale.
+
+        ``input_scale=None`` means the features are already integer-valued
+        (pre-quantized upstream); that contract is validated eagerly, since
+        raw floats would truncate to garbage in the bit-sparsity counters.
+        """
+        if self._input_scale is None:
+            if bool(jnp.any(x != jnp.round(x))):
+                raise ValueError(
+                    "input_scale=None requires integer-valued features; "
+                    "pass input_scale=calibrate_input_scale(features)")
+            return x
+        return spike_ops.quantize_input(x, self.cfg.input_bits,
+                                        self._input_scale)[0]
+
+    # ------------------------------------------------------- layer dispatch
+
+    def _kernels(self):
+        if self.engine.backend == "pallas":
+            return ops.rsnn_cell, ops.int4_matmul, ops.merged_spike_fc
+        return ref.rsnn_cell_ref, ref.int4_matmul_ref, ref.merged_spike_fc_ref
+
+    def _ff_matmul(self, x2d: jax.Array, name: str) -> jax.Array:
+        """Feedforward stimulus x @ W on the selected path. x2d: (M, K)."""
+        _, i4mm, _ = self._kernels()
+        if self.packed is not None and self.engine.backend == "pallas":
+            qt = self.packed.quant[name]
+            return i4mm(x2d, qt.packed, qt.scale.reshape(-1))
+        return x2d @ self._w[name]
+
+    def _frame_step(self, state: RSNNState, x_t: jax.Array):
+        """One quantized frame x_t (B, input_dim) -> (state, logits, aux)."""
+        cell, _, mfc = self._kernels()
+        w = self._w
+        lif = self._lif
+        ts = state.h0.shape[0]
+        b = x_t.shape[0]
+        h = self.cfg.hidden_dim
+
+        # L0: feedforward stimulus once per frame, shared across time steps
+        ff0 = self._ff_matmul(x_t, "l0_wx")  # (B, H)
+        stim0 = jnp.broadcast_to(ff0[None], (ts, b, h))
+        s0, u0 = cell(stim0, state.h0, w["l0_wh"], state.lif0.u,
+                      state.lif0.spike, lif["beta0"], lif["vth0"])
+        lif0 = LIFState(u=u0, spike=s0[-1])
+
+        # L1: per-ts feedforward from L0 spikes + recurrent
+        stim1 = self._ff_matmul(s0.reshape(ts * b, h), "l1_wx").reshape(ts, b, h)
+        s1, u1 = cell(stim1, state.h1, w["l1_wh"], state.lif1.u,
+                      state.lif1.spike, lif["beta1"], lif["vth1"])
+        lif1 = LIFState(u=u1, spike=s1[-1])
+
+        # FC readout
+        if self.engine.sparse_fc:
+            merged = spike_ops.merge_spikes(s1)
+            logits = sparse.sparse_matmul(merged, self.packed.sparse["fc_w"])
+        elif self.packed is not None:
+            qt = self.packed.quant["fc_w"]
+            if self.cfg.merged_spike:
+                logits = mfc(s1, qt.packed, qt.scale.reshape(-1))
+            else:
+                _, i4mm, _ = self._kernels()
+                logits = sum(i4mm(s1[t], qt.packed, qt.scale.reshape(-1))
+                             for t in range(ts))
+        elif self.cfg.merged_spike:
+            logits = spike_ops.merged_spike_fc(s1, w["fc_w"])
+        else:
+            logits = (s1 @ w["fc_w"]).sum(axis=0)
+
+        aux = _frame_counters(x_t, s0, s1, self.cfg.input_bits)
+        return RSNNState(h0=s0, h1=s1, lif0=lif0, lif1=lif1), logits, aux
+
+    # ------------------------------------------------------------ execution
+
+    def step(self, state: RSNNState, x_q: jax.Array):
+        """Advance every slot by one quantized frame. x_q: (B, input_dim)."""
+        return self._step(state, x_q)
+
+    def _run_scan(self, state: RSNNState, xq: jax.Array):
+        def body(st, x_t):
+            st, logits, aux = self._frame_step(st, x_t)
+            return st, (logits, aux)
+
+        state, (logits, aux) = jax.lax.scan(body, state, jnp.swapaxes(xq, 0, 1))
+        return state, jnp.swapaxes(logits, 0, 1), aux
+
+    def run(self, x: jax.Array, state: RSNNState | None = None):
+        """Batch-run a chunk of raw frames x (B, T_chunk, input_dim), carrying
+        state across calls. Returns (logits (B, T_chunk, fc_dim), state, aux);
+        aux counters are stacked per frame, already summed over slots."""
+        if state is None:
+            state = self.init_state(x.shape[0])
+        xq = self.quantize_features(x)
+        state, logits, aux = self._run(state, xq)
+        aux = {k: v.sum(axis=-1) for k, v in aux.items()}  # sum slots
+        return logits, state, aux
+
+
+def _frame_counters(x_t: jax.Array, s0: jax.Array, s1: jax.Array,
+                    input_bits: int) -> dict:
+    """Per-slot zero-skip counters for one frame (see module docstring)."""
+    one_bits = spike_ops.bitplanes(x_t, input_bits).sum(axis=(1, 2))  # (B,)
+    return {
+        "spikes_l0": s0.sum(axis=2),  # (TS, B)
+        "spikes_l1": s1.sum(axis=2),  # (TS, B)
+        "union_l1": s1.max(axis=0).sum(axis=1),  # (B,)
+        "input_one_bits": one_bits.astype(jnp.float32),  # (B,)
+    }
+
+
+# ---------------------------------------------------------------------------
+# Slot-based continuous batching over audio streams
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class StreamRequest:
+    """One utterance: its frames in, its per-frame logits out."""
+
+    sid: int
+    frames: np.ndarray  # (T, input_dim) raw features
+    fc_dim: int = 0  # logit width, stamped by StreamLoop.submit
+    logits: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+    def stacked_logits(self) -> np.ndarray:
+        if not self.logits:
+            return np.zeros((0, self.fc_dim), np.float32)
+        return np.stack(self.logits)
+
+
+class StreamLoop:
+    """Continuous batching of audio streams over recurrent-state slots.
+
+    N submitted utterances share a fixed decode batch of ``batch_slots``
+    rows.  Each ``step_once`` advances every active slot by one frame; a
+    slot whose utterance ends is state-reset and refilled from the queue
+    mid-batch, so throughput never drops to the shortest stream.  Idle slots
+    carry zero frames and are excluded from the sparsity counters.
+    """
+
+    def __init__(self, engine: CompiledRSNN, batch_slots: int = 4):
+        self.engine = engine
+        self.slots = batch_slots
+        self.queue: list[StreamRequest] = []
+        self.finished: list[StreamRequest] = []
+        self.state = engine.init_state(batch_slots)
+        self.slot_req: list[StreamRequest | None] = [None] * batch_slots
+        self.slot_pos = [0] * batch_slots
+        self._next_sid = 0
+        cfg = engine.cfg
+        self.counters = complexity.SparsityCounters(
+            num_ts=cfg.num_ts, hidden_dim=cfg.hidden_dim,
+            input_dim=cfg.input_dim, input_bits=cfg.input_bits)
+        self.steps = 0
+
+    def submit(self, frames: np.ndarray) -> int:
+        sid = self._next_sid
+        self._next_sid += 1
+        req = StreamRequest(sid, np.asarray(frames),
+                            fc_dim=self.engine.cfg.fc_dim)
+        if len(req.frames) == 0:  # empty utterance: nothing to stream
+            req.done = True
+            self.finished.append(req)
+        else:
+            self.queue.append(req)
+        return sid
+
+    def _refill(self) -> None:
+        for i in range(self.slots):
+            if self.slot_req[i] is None and self.queue:
+                self.slot_req[i] = self.queue.pop(0)
+                self.slot_pos[i] = 0
+                self.state = reset_slot(self.state, i)
+
+    def step_once(self) -> bool:
+        """One engine step over all slots; returns False when fully drained."""
+        self._refill()
+        active = np.array([r is not None for r in self.slot_req], bool)
+        if not active.any():
+            return False
+        d = self.engine.cfg.input_dim
+        x = np.zeros((self.slots, d), np.float32)
+        for i, r in enumerate(self.slot_req):
+            if r is not None:
+                x[i] = r.frames[self.slot_pos[i]]
+        xq = self.engine.quantize_features(jnp.asarray(x))
+        self.state, logits, aux = self.engine.step(self.state, xq)
+        self.steps += 1
+        logits_np = np.asarray(logits)
+        act = jnp.asarray(active, jnp.float32)
+        self.counters.update(
+            {k: np.asarray((v * act).sum(axis=-1)) for k, v in aux.items()},
+            active_frames=float(active.sum()))
+        for i, r in enumerate(self.slot_req):
+            if r is None:
+                continue
+            r.logits.append(logits_np[i])
+            self.slot_pos[i] += 1
+            if self.slot_pos[i] == len(r.frames):
+                r.done = True
+                self.finished.append(r)
+                self.slot_req[i] = None
+                self.state = reset_slot(self.state, i)
+        return True
+
+    def run(self) -> list[StreamRequest]:
+        """Drain queue and slots; returns finished requests in sid order."""
+        while self.step_once():
+            pass
+        return sorted(self.finished, key=lambda r: r.sid)
+
+    # --------------------------------------------------- measured complexity
+
+    def sparsity_profile(self) -> complexity.SparsityProfile:
+        return self.counters.profile()
+
+    def mmac_per_second(self, fc_prune_frac: float | None = None) -> float:
+        """Zero-skip MMAC/s of the traffic served so far (paper Fig. 13).
+
+        Defaults to the pruning fraction of the model the engine actually
+        serves."""
+        if fc_prune_frac is None:
+            fc_prune_frac = self.engine.fc_prune_frac
+        return self.counters.mmac_per_second(
+            self.engine.cfg, merged_spike=self.engine.cfg.merged_spike,
+            fc_prune_frac=fc_prune_frac)

@@ -1,0 +1,41 @@
+"""Shared fixtures + the slow-test tier.
+
+Default tier-1 run (``pytest -q``) skips tests marked ``slow`` (the
+JIT-heavy end-to-end pipeline/training suites); pass ``--runslow`` to
+include them.
+"""
+
+import jax
+import pytest
+
+from repro.core.rsnn import RSNNConfig
+
+
+def pytest_addoption(parser):
+    parser.addoption("--runslow", action="store_true", default=False,
+                     help="also run tests marked slow (JIT-heavy system runs)")
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: JIT-heavy system/training test, needs --runslow")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--runslow"):
+        return
+    skip_slow = pytest.mark.skip(reason="slow test: use --runslow")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip_slow)
+
+
+@pytest.fixture
+def small_cfg() -> RSNNConfig:
+    """CPU-sized RSNN (same topology as the paper's, tiny dims)."""
+    return RSNNConfig(input_dim=8, hidden_dim=16, fc_dim=12, num_ts=2)
+
+
+@pytest.fixture
+def rng_key() -> jax.Array:
+    return jax.random.PRNGKey(0)

@@ -12,6 +12,10 @@ from repro.models import registry
 from repro.training import optimizer as opt_lib
 from repro.training.optimizer import OptimizerConfig
 
+# JIT-compiles a forward + train step for every assigned arch family
+# (~3 min on CPU) — slow tier, run with --runslow
+pytestmark = pytest.mark.slow
+
 ARCHS = registry.list_archs()
 B, S = 2, 16
 

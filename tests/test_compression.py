@@ -1,20 +1,30 @@
-"""Property-based tests for the compression stack (hypothesis)."""
+"""Property-based tests for the compression stack.
+
+``hypothesis`` is optional: when installed the properties run fuzzed, and a
+deterministic-examples tier always runs so the core assertions hold on a
+bare ``pytest`` install (requirements-dev.txt has both)."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
 from repro.core.compression import (CompressionConfig, init_compression,
                                     materializer, compressed_size_bytes,
                                     pruning, quantization)
 from repro.core.compression.quantization import QuantSpec
 
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on bare installs
+    HAVE_HYPOTHESIS = False
 
-@settings(max_examples=25, deadline=None)
-@given(rows=st.integers(4, 64), cols=st.integers(4, 64),
-       frac=st.floats(0.0, 0.9), seed=st.integers(0, 2**31 - 1))
-def test_magnitude_mask_properties(rows, cols, frac, seed):
+
+# ------------------------------------------------------- property bodies
+
+
+def _check_magnitude_mask(rows, cols, frac, seed):
     w = np.random.default_rng(seed).normal(size=(rows, cols)).astype(np.float32)
     m = np.asarray(pruning.magnitude_prune_mask(jnp.asarray(w), frac))
     assert set(np.unique(m)) <= {0.0, 1.0}
@@ -26,10 +36,7 @@ def test_magnitude_mask_properties(rows, cols, frac, seed):
         assert np.abs(w)[m == 1].min() >= np.abs(w)[m == 0].max() - 1e-6
 
 
-@settings(max_examples=25, deadline=None)
-@given(bits=st.sampled_from([2, 4, 8]), seed=st.integers(0, 2**31 - 1),
-       per_channel=st.booleans())
-def test_fake_quant_error_bound(bits, seed, per_channel):
+def _check_fake_quant_error_bound(bits, seed, per_channel):
     w = np.random.default_rng(seed).normal(size=(32, 16)).astype(np.float32)
     spec = QuantSpec(bits=bits,
                      granularity="per_channel" if per_channel else "per_tensor")
@@ -46,14 +53,60 @@ def test_fake_quant_error_bound(bits, seed, per_channel):
     assert uniq <= 2 ** bits * (16 if per_channel else 1)
 
 
-@settings(max_examples=20, deadline=None)
-@given(k=st.integers(1, 32), n=st.integers(1, 32), seed=st.integers(0, 2**31 - 1))
-def test_int4_pack_roundtrip(k, n, seed):
+def _check_int4_pack_roundtrip(k, n, seed):
     q = np.random.default_rng(seed).integers(-8, 8, size=(2 * k, n)).astype(np.int8)
     packed = quantization.pack_int4(jnp.asarray(q))
     assert packed.shape == (k, n)
     out = np.asarray(quantization.unpack_int4(packed))
     np.testing.assert_array_equal(out, q)
+
+
+# --------------------------------------- deterministic tier (always runs)
+
+
+@pytest.mark.parametrize("rows,cols,frac,seed",
+                         [(4, 4, 0.0, 0), (16, 8, 0.4, 1), (33, 7, 0.9, 2),
+                          (64, 64, 0.5, 3)])
+def test_magnitude_mask_properties(rows, cols, frac, seed):
+    _check_magnitude_mask(rows, cols, frac, seed)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("per_channel", [False, True])
+def test_fake_quant_error_bound(bits, per_channel):
+    _check_fake_quant_error_bound(bits, seed=bits, per_channel=per_channel)
+
+
+@pytest.mark.parametrize("k,n,seed", [(1, 1, 0), (8, 16, 1), (32, 5, 2)])
+def test_int4_pack_roundtrip(k, n, seed):
+    _check_int4_pack_roundtrip(k, n, seed)
+
+
+# -------------------------------------------- fuzzed tier (hypothesis only)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(rows=st.integers(4, 64), cols=st.integers(4, 64),
+           frac=st.floats(0.0, 0.9), seed=st.integers(0, 2**31 - 1))
+    def test_magnitude_mask_properties_fuzzed(rows, cols, frac, seed):
+        _check_magnitude_mask(rows, cols, frac, seed)
+
+    @settings(max_examples=25, deadline=None)
+    @given(bits=st.sampled_from([2, 4, 8]), seed=st.integers(0, 2**31 - 1),
+           per_channel=st.booleans())
+    def test_fake_quant_error_bound_fuzzed(bits, seed, per_channel):
+        _check_fake_quant_error_bound(bits, seed, per_channel)
+
+    @settings(max_examples=20, deadline=None)
+    @given(k=st.integers(1, 32), n=st.integers(1, 32),
+           seed=st.integers(0, 2**31 - 1))
+    def test_int4_pack_roundtrip_fuzzed(k, n, seed):
+        _check_int4_pack_roundtrip(k, n, seed)
+
+
+# ------------------------------------------------------------- unit tests
 
 
 def test_nm_prune_mask():

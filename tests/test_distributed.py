@@ -8,6 +8,11 @@ import sys
 import textwrap
 
 import jax
+import pytest
+
+# multi-device cases spawn fresh 8-fake-device subprocesses that re-JIT the
+# train step (minutes on CPU) — slow tier, run with --runslow
+pytestmark = pytest.mark.slow
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P

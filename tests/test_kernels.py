@@ -1,13 +1,26 @@
-"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis."""
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + properties.
+
+``hypothesis`` is optional (try-import); a deterministic seed sweep keeps
+the parity properties running on bare installs.  On CPU the kernels run in
+interpret mode via ``kernels.ops``; the explicit ``interpret=True`` sweep
+pins that mode regardless of backend."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops, ref
+from repro.kernels import int4_matmul as i4_lib
+from repro.kernels import merged_spike_fc as mfc_lib
+from repro.kernels import rsnn_cell as cell_lib
 from repro.core.compression import quantization
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on bare installs
+    HAVE_HYPOTHESIS = False
 
 
 def _pack(q):
@@ -54,6 +67,43 @@ def test_rsnn_cell_matches_core_lif():
     np.testing.assert_allclose(np.asarray(u_k), np.asarray(cur.u), rtol=2e-5)
 
 
+# --------------------------------------- explicit interpret-mode parity sweep
+
+
+@pytest.mark.parametrize("ts", [1, 2])
+@pytest.mark.parametrize("h", [128, 256])
+def test_parity_sweep_interpret_mode(ts, h):
+    """Full fused-layer + FC parity, interpret=True pinned on every kernel
+    (TS in {1,2}, H in {128,256} — the paper's deployed configurations)."""
+    rng = np.random.default_rng(ts * 31 + h)
+    b, n = 128, 256
+    stim = jnp.asarray(rng.normal(size=(ts, b, h)), jnp.float32)
+    s_prev = jnp.asarray(rng.integers(0, 2, (ts, b, h)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(h, h)) * 0.1, jnp.float32)
+    u0 = jnp.asarray(rng.normal(size=(b, h)), jnp.float32)
+    h0 = jnp.asarray(rng.integers(0, 2, (b, h)), jnp.float32)
+    beta = jnp.asarray(rng.uniform(0.5, 0.99, h), jnp.float32)
+    vth = jnp.asarray(rng.uniform(0.5, 1.5, h), jnp.float32)
+    sp_k, u_k = cell_lib.rsnn_cell(stim, s_prev, w, u0, h0, beta, vth,
+                                   interpret=True)
+    sp_r, u_r = ref.rsnn_cell_ref(stim, s_prev, w, u0, h0, beta, vth)
+    np.testing.assert_array_equal(np.asarray(sp_k), np.asarray(sp_r))
+    np.testing.assert_allclose(np.asarray(u_k), np.asarray(u_r),
+                               rtol=2e-5, atol=2e-5)
+
+    # int4 matmul + merged-spike FC on the spikes the cell just produced
+    q = jnp.asarray(rng.integers(-8, 8, (h, n)), jnp.int8)
+    scale = jnp.asarray(rng.uniform(0.01, 0.1, n), jnp.float32)
+    o_k = i4_lib.int4_matmul(sp_k[0], _pack(q), scale, interpret=True)
+    o_r = ref.int4_matmul_ref(sp_r[0], _pack(q), scale)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               rtol=1e-4, atol=1e-4)
+    f_k = mfc_lib.merged_spike_fc(sp_k, _pack(q), scale, interpret=True)
+    f_r = ref.merged_spike_fc_ref(sp_r, _pack(q), scale)
+    np.testing.assert_allclose(np.asarray(f_k), np.asarray(f_r),
+                               rtol=1e-4, atol=1e-4)
+
+
 @pytest.mark.parametrize("m,k,n", [(128, 256, 128), (256, 1024, 256),
                                    (128, 512, 1920 // 15 * 16)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
@@ -94,9 +144,10 @@ def test_merged_fc_equals_quantized_core_fc():
                                atol=1e-4)
 
 
-@settings(max_examples=10, deadline=None)
-@given(bt=st.integers(1, 4), seed=st.integers(0, 2**31 - 1))
-def test_rsnn_cell_hypothesis(bt, seed):
+# ------------------------------------------------ property: cell parity
+
+
+def _check_rsnn_cell_parity(bt, seed):
     rng = np.random.default_rng(seed)
     b, h = 128 * bt, 128
     stim = jnp.asarray(rng.normal(size=(2, b, h)), jnp.float32)
@@ -109,3 +160,40 @@ def test_rsnn_cell_hypothesis(bt, seed):
     sp_r, u_r = ref.rsnn_cell_ref(stim, s_prev, w, z, z, beta, vth)
     np.testing.assert_array_equal(np.asarray(sp_k), np.asarray(sp_r))
     np.testing.assert_allclose(np.asarray(u_k), np.asarray(u_r), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("bt,seed", [(1, 0), (2, 123), (4, 2**31 - 1)])
+def test_rsnn_cell_parity_deterministic(bt, seed):
+    _check_rsnn_cell_parity(bt, seed)
+
+
+# --------------------------------------- property: int4 pack/unpack codec
+
+
+def _check_int4_roundtrip_kernel_codec(k, n, seed):
+    """quantization.pack_int4 -> kernel-side unpack == identity (the codec
+    shared by int4_matmul/merged_spike_fc) and matches ref.unpack_int4_ref."""
+    q = np.random.default_rng(seed).integers(-8, 8, (2 * k, n)).astype(np.int8)
+    packed = quantization.pack_int4(jnp.asarray(q))
+    via_kernel = np.asarray(i4_lib._unpack_block(jnp.asarray(packed)))
+    np.testing.assert_array_equal(via_kernel, q.astype(np.float32))
+    np.testing.assert_array_equal(np.asarray(ref.unpack_int4_ref(packed)), q)
+
+
+@pytest.mark.parametrize("k,n,seed", [(1, 1, 0), (4, 8, 1), (64, 128, 2)])
+def test_int4_roundtrip_kernel_codec(k, n, seed):
+    _check_int4_roundtrip_kernel_codec(k, n, seed)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=10, deadline=None)
+    @given(bt=st.integers(1, 4), seed=st.integers(0, 2**31 - 1))
+    def test_rsnn_cell_parity_fuzzed(bt, seed):
+        _check_rsnn_cell_parity(bt, seed)
+
+    @settings(max_examples=20, deadline=None)
+    @given(k=st.integers(1, 64), n=st.integers(1, 64),
+           seed=st.integers(0, 2**31 - 1))
+    def test_int4_roundtrip_kernel_codec_fuzzed(k, n, seed):
+        _check_int4_roundtrip_kernel_codec(k, n, seed)

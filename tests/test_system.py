@@ -5,6 +5,10 @@ behave as the paper describes (sparsity in the 50-80% band)."""
 import pytest
 
 from repro.core import complexity as C
+
+# whole-module fixture runs the full 4-stage compression pipeline (minutes
+# of JIT + training on CPU) — slow tier, run with --runslow
+pytestmark = pytest.mark.slow
 from repro.core.rsnn import RSNNConfig
 from repro.data.synthetic import SpeechDataConfig
 from repro.training.rsnn_pipeline import run_pipeline
