@@ -180,12 +180,137 @@ def bench_stream_engine():
     logits, _, aux = engine.run(x, state)
     frames = 8 * 100
     spikes_l1 = float(aux["spikes_l1"].sum())
+
+    # CSC zero-skip FC variants with IDENTICAL jnp cells, so the delta
+    # isolates the FC op: the materializing jnp gather vs the fused Pallas
+    # kernel, the latter plugged in as a bench-local registry backend.
+    import dataclasses as _dc
+
+    from repro.kernels import ops as kops
+    from repro.serving import backends as B
+
+    @B.register("bench_ref_fused_fc", dense_stimulus=True)
+    def _ref_cells_fused_fc(ctx):
+        table = B.resolve("ref", _dc.replace(ctx, sparse_fc=False))
+        sc = ctx.sparse["fc_w"]
+        return table._replace(
+            name="bench_ref_fused_fc",
+            fc=lambda s1: kops.sparse_fc(s1, sc.indices, sc.values,
+                                         sc.scale))
+
+    def _variant_us(engine_kw):
+        eng = CompiledRSNN(cfg, params, EngineConfig(input_scale=0.05,
+                                                     **engine_kw),
+                           ccfg=ccfg, cstate=init_compression(params, ccfg))
+        st = eng.init_state(8)
+        return time_us(lambda x: eng.run(x, st)[0], x, iters=4)
+
+    try:
+        gather_us = _variant_us(dict(backend="jnp", precision="int4",
+                                     sparse_fc=True))
+        fused_us = _variant_us(dict(backend="bench_ref_fused_fc",
+                                    precision="int4"))
+    finally:
+        B.unregister("bench_ref_fused_fc")  # bench-local plugin only
     return us, {
         "path": "int4 packed, jnp oracle backend",
         "us_per_frame": round(us / frames, 2),
         "realtime_streams_cpu": int(frames / (us / 1e6) / C.FRAMES_PER_SECOND),
         "l1_spike_density": round(
             spikes_l1 / (frames * cfg.num_ts * cfg.hidden_dim), 4),
+        "sparse_gather_us_per_frame": round(gather_us / frames, 2),
+        "sparse_fused_us_per_frame": round(fused_us / frames, 2),
+        "sparse_fused_speedup": round(gather_us / fused_us, 3),
+    }
+
+
+def bench_sparse_fc():
+    """Fused zero-skip CSC FC kernel (kernels/sparse_fc.py) vs the
+    materializing jnp gather (core.sparse.sparse_matmul) at the paper's
+    deployed FC shape; the derived row carries the measured sparsity
+    profile of the weights/spikes the timing ran on."""
+    from repro.core import sparse as sparse_lib
+    from repro.core.compression.compress import (CompressionConfig,
+                                                 init_compression)
+    from repro.kernels import ops as kops
+
+    cfg = PRUNED
+    params = rsnn.init_params(jax.random.PRNGKey(0), cfg)
+    ccfg = CompressionConfig(fc_prune_frac=0.4, weight_bits=4)
+    packed = sparse_lib.pack_model(params, cfg, ccfg,
+                                   init_compression(params, ccfg))
+    sc = packed.sparse["fc_w"]
+    rng = np.random.default_rng(0)
+    s = jnp.asarray(rng.integers(0, 2, (cfg.num_ts, 128, cfg.hidden_dim)),
+                    jnp.float32)
+    gather = jax.jit(lambda s: sparse_lib.sparse_matmul(s.sum(axis=0), sc))
+    fused = jax.jit(
+        lambda s: kops.sparse_fc(s, sc.indices, sc.values, sc.scale))
+    us_gather = time_us(gather, s, iters=10)
+    us_fused = time_us(fused, s, iters=10)
+    nnz = float((np.asarray(sc.values) != 0).sum())
+    return us_fused, {
+        "kernel": "sparse_fc (fused CSC zero-skip; interpret mode on CPU)",
+        "us_jnp_gather": round(us_gather, 1),
+        "speedup_vs_gather": round(us_gather / us_fused, 3),
+        "sparsity_profile": {
+            "fc_weight_density": round(
+                nnz / (cfg.hidden_dim * cfg.fc_dim), 4),
+            "nnz_max": int(sc.indices.shape[0]),
+            "spike_density": round(float(s.mean()), 4),
+        },
+    }
+
+
+def bench_stream_sharded():
+    """Sharded StreamLoop over the local mesh (1 device here; the 8-virtual-
+    device parity is proven by tests/test_sharded_stream.py): frames/s and
+    the measured sparsity profile of the served traffic."""
+    from repro.core.compression.compress import (CompressionConfig,
+                                                 init_compression)
+    from repro.serving.sharded import ShardedStreamLoop
+    from repro.serving.stream import CompiledRSNN, EngineConfig
+
+    cfg = PRUNED
+    params = rsnn.init_params(jax.random.PRNGKey(0), cfg)
+    ccfg = CompressionConfig(fc_prune_frac=0.4, weight_bits=4)
+    engine = CompiledRSNN(cfg, params,
+                          EngineConfig(precision="int4", input_scale=0.05),
+                          ccfg=ccfg, cstate=init_compression(params, ccfg))
+    rng = np.random.default_rng(0)
+    utts = [0.5 * rng.normal(size=(int(rng.integers(40, 101)),
+                                   cfg.input_dim)).astype(np.float32)
+            for _ in range(8)]
+    # smallest multiple of the device count that covers 4 slots (the bench
+    # must also run under the CI smoke env's 8 virtual devices)
+    ndev = len(jax.devices())
+    loop = ShardedStreamLoop(engine, batch_slots=max(4 // ndev, 1) * ndev,
+                             max_frames=128)
+    # warm the jitted step on a throwaway utterance (compile otherwise
+    # dominates the timed region, like time_us's warmup call elsewhere)
+    loop.submit(utts[0][:4])
+    loop.run()
+    loop.finished.clear()
+    loop.reset_metrics()
+    for u in utts:
+        loop.submit(u)
+    t0 = time.perf_counter()
+    loop.run()
+    dt = time.perf_counter() - t0
+    frames = int(loop.counters.frames)
+    prof = loop.sparsity_profile()
+    return dt / max(loop.steps, 1) * 1e6, {
+        "devices": len(jax.devices()),
+        "slots": loop.slots,
+        "frames": frames,
+        "frames_per_s": round(frames / dt, 1),
+        "measured_mmac_per_s": round(loop.mmac_per_second(), 3),
+        "sparsity_profile": {
+            "input_bit_density": round(prof.input_bit_density, 4),
+            "l0_density": [round(d, 4) for d in prof.l0_density],
+            "l1_density": [round(d, 4) for d in prof.l1_density],
+            "fc_union_density": round(prof.fc_union_density, 4),
+        },
     }
 
 

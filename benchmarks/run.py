@@ -32,8 +32,12 @@ def main() -> None:
     _emit("bench_rsnn_forward", us, d)
     us, d = T.bench_kernels()
     _emit("bench_merged_spike_fc", us, d)
+    us, d = T.bench_sparse_fc()
+    _emit("bench_sparse_fc", us, d)
     us, d = T.bench_stream_engine()
     _emit("bench_stream_engine", us, d)
+    us, d = T.bench_stream_sharded()
+    _emit("bench_stream_sharded", us, d)
 
     # roofline summary (reads results/dryrun)
     try:

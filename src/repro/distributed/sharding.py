@@ -150,6 +150,38 @@ def cache_spec(pathstr: str, shape: tuple[int, ...], mesh, batch: int) -> P:
     return P(*spec)
 
 
+# --- streaming RSNN serving state --------------------------------------------
+
+
+def stream_state_specs(state, axis: str = "data"):
+    """PartitionSpecs for the streaming engine's recurrent slot state.
+
+    The slot/batch dim shards over ``axis``; everything else replicates.
+    Convention of ``core.rsnn.RSNNState``: 3-D+ leaves are (TS, B, H) spike
+    trains (slot dim 1), 2-D leaves are (B, H) LIF membrane chains and 1-D
+    leaves per-slot scalars (slot dim 0).  ``serving/sharded.py`` places
+    the recurrent state and per-slot cursors with these specs (its pinned
+    (slots, T, d) frame buffer carries the slot dim first and is placed
+    explicitly).
+    """
+
+    def spec(leaf) -> P:
+        if leaf.ndim >= 3:
+            return P(None, axis, *([None] * (leaf.ndim - 2)))
+        if leaf.ndim == 2:
+            return P(axis, None)
+        return P(axis) if leaf.ndim == 1 else P()
+
+    return jax.tree.map(spec, state)
+
+
+def stream_shardings(state, mesh, axis: str = "data"):
+    """``stream_state_specs`` materialized as NamedShardings on ``mesh``."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        stream_state_specs(state, axis),
+                        is_leaf=lambda s: isinstance(s, P))
+
+
 # --- tree-level helpers -------------------------------------------------------
 
 

@@ -11,6 +11,7 @@ import jax
 from repro.kernels import int4_matmul as _i4
 from repro.kernels import merged_spike_fc as _mfc
 from repro.kernels import rsnn_cell as _cell
+from repro.kernels import sparse_fc as _sfc
 
 
 def _interpret() -> bool:
@@ -30,3 +31,8 @@ def int4_matmul(x, packed, scale, *, block_m=128, block_n=128, block_k=512):
 def merged_spike_fc(spikes_ts, packed, scale, *, block_b=128, block_n=128):
     return _mfc.merged_spike_fc(spikes_ts, packed, scale, block_b=block_b,
                                 block_n=block_n, interpret=_interpret())
+
+
+def sparse_fc(spikes_ts, indices, values, scale, *, block_b=128, block_n=512):
+    return _sfc.sparse_fc(spikes_ts, indices, values, scale, block_b=block_b,
+                          block_n=block_n, interpret=_interpret())

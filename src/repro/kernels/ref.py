@@ -55,3 +55,20 @@ def merged_spike_fc_ref(spikes_ts: jax.Array, packed: jax.Array,
     time steps. spikes_ts: (TS, B, H) binary."""
     merged = spikes_ts.sum(axis=0)  # in {0..TS}
     return int4_matmul_ref(merged, packed, scale)
+
+
+def sparse_fc_ref(spikes_ts: jax.Array, indices: jax.Array, values: jax.Array,
+                  scale: jax.Array) -> jax.Array:
+    """Zero-skip FC over padded-CSC columns: the merged-spike input path
+    fused onto ``core.sparse.sparse_matmul`` (delegated, so the oracle can
+    never drift from the deployment layout's gather semantics).
+
+    spikes_ts: (TS, B, H) binary (or pre-merged (B, H)); indices/values:
+    (nnz_max, N), 0-padded; scale: (N,) or (1, N).
+    """
+    from repro.core import sparse  # deferred: keep this oracle module light
+
+    merged = spikes_ts.sum(axis=0) if spikes_ts.ndim == 3 else spikes_ts
+    sc = sparse.SparseColumns(indices=indices, values=values,
+                              scale=scale.reshape(1, -1))
+    return sparse.sparse_matmul(merged, sc)

@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: fused zero-skip sparse FC over padded-CSC columns.
+
+Consumes ``core.sparse.SparseColumns`` directly — the deployment layout of
+the paper's 40%-unstructured-pruned FC.  The jnp reference
+(``core.sparse.sparse_matmul``) gathers ``x[:, indices]`` which XLA
+materializes as a ``(B, nnz_max, N)`` HBM intermediate; here the gather is
+tiled: for each output-channel block the ``(nnz_max, bN)`` index/value
+tiles sit in VMEM next to the batch tile of the merged spike vector, rows
+are gathered and FMA'd in VMEM, and only the ``(bB, bN)`` result ever
+leaves the core.  Work still scales with nnz (the accelerator's skipped
+accumulates), weight traffic with the CSC payload.
+
+Merged-spike input path (paper §II-D2): the kernel accepts the raw
+``(TS, B, H)`` spike trains and sums them over TS in VMEM before the
+gather — one CSC pass serves every time step, the same trick
+``kernels/merged_spike_fc.py`` plays for the dense int4 FC.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fit_block(dim: int, block: int) -> int:
+    """Largest tile <= block that divides dim (grid must tile exactly; the
+    paper's fc_dim=1920 is not a power-of-2 multiple)."""
+    block = min(block, dim)
+    while dim % block:
+        block -= 1
+    return block
+
+
+def _sparse_fc_kernel(s_ref, idx_ref, val_ref, scale_ref, o_ref):
+    # merge time steps in VMEM: one CSC pass for all TS
+    x = s_ref[...].astype(jnp.float32).sum(axis=0)  # (bB, H)
+    idx = idx_ref[...]  # (nnz_max, bN) int32 row ids, 0-padded
+    val = val_ref[...].astype(jnp.float32)  # (nnz_max, bN), 0 on padding
+    bb = x.shape[0]
+    nnz, bn = idx.shape
+    # gather surviving rows per output channel; padded entries carry value 0
+    # so they contribute nothing (no mask needed)
+    gathered = jnp.take(x, idx.reshape(-1), axis=1).reshape(bb, nnz, bn)
+    acc = (gathered * val[None]).sum(axis=1)  # (bB, bN)
+    o_ref[...] = (acc * scale_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_n", "interpret"))
+def sparse_fc(spikes_ts: jax.Array, indices: jax.Array, values: jax.Array,
+              scale: jax.Array, *, block_b: int = 128, block_n: int = 512,
+              interpret: bool = False) -> jax.Array:
+    """Zero-skip FC: merged spikes @ padded-CSC int4 weights -> (B, N) f32.
+
+    spikes_ts: (TS, B, H) binary spike trains (a pre-merged (B, H) input is
+    also accepted); indices/values: (nnz_max, N) from
+    ``core.sparse.SparseColumns``; scale: (N,) or (1, N) per-channel.
+    Accumulation order matches ``core.sparse.sparse_matmul`` (sum over the
+    nnz axis), so results agree with the dense matmul to float tolerance.
+    """
+    if spikes_ts.ndim == 2:
+        spikes_ts = spikes_ts[None]
+    ts, b, h = spikes_ts.shape
+    nnz, n = indices.shape
+    bb, bn = _fit_block(b, block_b), _fit_block(n, block_n)
+    grid = (b // bb, n // bn)
+    return pl.pallas_call(
+        _sparse_fc_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ts, bb, h), lambda i, j: (0, i, 0)),
+            pl.BlockSpec((nnz, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((nnz, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bb, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=interpret,
+    )(spikes_ts, indices, values, scale.reshape(1, n))

@@ -1,0 +1,185 @@
+"""Named execution backends for the streaming RSNN engine.
+
+``CompiledRSNN`` used to hard-code its per-layer kernel/oracle selection in
+``__init__``/``_kernels``/``_ff_matmul``; this module is that logic as a
+dispatch layer.  A *backend* is a named recipe that, given the deployed
+weight bundle (``BackendContext``), returns a uniform ``OpTable``:
+
+  * ``rsnn_cell``   — fused recurrent-spiking-layer step (TS parallel);
+  * ``ff_matmul``   — per-layer feedforward stimulus ``x @ W`` (resolved
+    per layer name and per precision: dense float, dense dequant, or the
+    int4 Pallas matmul on the packed nibbles);
+  * ``fc``          — the readout over the TS spike trains (merged-spike
+    dense, per-ts int4, or the zero-skip CSC path).
+
+Built-in backends:
+
+  ``ref`` (alias ``jnp``)  — the jnp oracles in ``kernels/ref``; with
+      ``sparse_fc`` the readout is ``core.sparse.sparse_matmul``'s CSC
+      gather (the materializing jnp reference).
+  ``pallas``               — the fused Pallas kernels in ``kernels/ops``
+      (interpret mode on CPU, Mosaic on TPU).
+  ``sparse``               — ``pallas`` cells/stimulus plus the fused
+      zero-skip FC kernel (``kernels/sparse_fc``) consuming the padded-CSC
+      ``SparseColumns`` directly.
+
+New kernels plug in via ``register`` without touching the engine: the
+engine resolves a table once at construction and calls through it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+
+from repro.core import sparse, spike_ops
+from repro.core.rsnn import RSNNConfig
+from repro.kernels import ops, ref
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendContext:
+    """The deployed weight bundle an OpTable is resolved against.
+
+    ``dense`` holds float matrices for ops that consume dense weights (the
+    full parameter set at float precision; the bit-exact dequant copies at
+    int4).  ``quant``/``sparse`` hold the packed int4 / padded-CSC layouts
+    (int4 precision only).  Resolution happens once per engine build, so
+    the returned closures capture concrete arrays and stay jit-friendly.
+    """
+
+    cfg: RSNNConfig
+    precision: str  # "float" | "int4"
+    sparse_fc: bool  # zero-skip CSC readout instead of the dense FC
+    dense: dict  # name -> (K, N) float32
+    quant: dict  # name -> sparse.QuantTensor
+    sparse: dict  # name -> sparse.SparseColumns
+
+
+class OpTable(NamedTuple):
+    """Uniform per-backend op set consumed by ``CompiledRSNN``."""
+
+    name: str
+    rsnn_cell: Callable  # (stim, s_prev, w, u0, h0, beta, vth) -> (s, u)
+    ff_matmul: Callable  # (x2d (M, K), layer_name) -> (M, N)
+    fc: Callable  # (spikes_ts (TS, B, H)) -> (B, fc_dim)
+    mxu_aligned: bool  # True: batch must satisfy the 128-row MXU tiling
+
+
+class _Entry(NamedTuple):
+    builder: Callable  # BackendContext -> OpTable
+    dense_stimulus: bool  # int4 ff_matmul consumes dense dequant weights
+
+
+_REGISTRY: dict[str, _Entry] = {}
+
+
+def register(name: str, *aliases: str, dense_stimulus: bool = False):
+    """Decorator: register an OpTable builder under ``name`` (+ aliases).
+
+    ``dense_stimulus=True`` declares that at int4 precision the backend's
+    ``ff_matmul`` reads dense dequantized weights (so the engine must
+    materialize them) rather than the packed nibbles.
+    """
+
+    def deco(builder: Callable[[BackendContext], OpTable]):
+        for key in (name, *aliases):
+            _REGISTRY[key] = _Entry(builder, dense_stimulus)
+        return builder
+
+    return deco
+
+
+def available() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def unregister(name: str) -> None:
+    """Remove a registered backend (for bench/test-local plugins)."""
+    _REGISTRY.pop(name, None)
+
+
+def needs_dense_stimulus(name: str) -> bool:
+    """Whether backend ``name``'s int4 feedforward path wants dense weights."""
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown backend {name!r}; available: {available()}")
+    return _REGISTRY[name].dense_stimulus
+
+
+def resolve(name: str, ctx: BackendContext) -> OpTable:
+    """Build the op table of backend ``name`` over the weight bundle."""
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown backend {name!r}; available: {available()}")
+    return _REGISTRY[name].builder(ctx)
+
+
+# ------------------------------------------------------------ op resolution
+
+
+def _dense_ff(ctx: BackendContext) -> Callable:
+    def ff(x2d: jax.Array, name: str) -> jax.Array:
+        return x2d @ ctx.dense[name]
+
+    return ff
+
+
+def _fc_op(ctx: BackendContext, *, mfc: Callable, i4mm: Callable,
+           csc_fc: Callable) -> Callable:
+    """Resolve the readout: CSC zero-skip > packed int4 > dense float."""
+    if ctx.sparse_fc:
+        sc = ctx.sparse["fc_w"]
+        return lambda s1: csc_fc(s1, sc)
+    if ctx.precision == "int4":
+        qt = ctx.quant["fc_w"]
+        scale = qt.scale.reshape(-1)
+        if ctx.cfg.merged_spike:
+            return lambda s1: mfc(s1, qt.packed, scale)
+        return lambda s1: sum(i4mm(s1[t], qt.packed, scale)
+                              for t in range(ctx.cfg.num_ts))
+    w = ctx.dense["fc_w"]
+    if ctx.cfg.merged_spike:
+        return lambda s1: spike_ops.merged_spike_fc(s1, w)
+    return lambda s1: (s1 @ w).sum(axis=0)
+
+
+# ------------------------------------------------------- built-in backends
+
+
+@register("ref", "jnp", dense_stimulus=True)
+def _build_ref(ctx: BackendContext) -> OpTable:
+    def csc_fc(s1, sc):
+        return sparse.sparse_matmul(spike_ops.merge_spikes(s1), sc)
+
+    fc = _fc_op(ctx, mfc=ref.merged_spike_fc_ref, i4mm=ref.int4_matmul_ref,
+                csc_fc=csc_fc)
+    return OpTable(name="ref", rsnn_cell=ref.rsnn_cell_ref,
+                   ff_matmul=_dense_ff(ctx), fc=fc, mxu_aligned=False)
+
+
+@register("pallas")
+def _build_pallas(ctx: BackendContext) -> OpTable:
+    if ctx.precision == "int4":
+        def ff(x2d: jax.Array, name: str) -> jax.Array:
+            qt = ctx.quant[name]
+            return ops.int4_matmul(x2d, qt.packed, qt.scale.reshape(-1))
+    else:
+        ff = _dense_ff(ctx)
+
+    def csc_fc(s1, sc):
+        return ops.sparse_fc(s1, sc.indices, sc.values, sc.scale)
+
+    fc = _fc_op(ctx, mfc=ops.merged_spike_fc, i4mm=ops.int4_matmul,
+                csc_fc=csc_fc)
+    return OpTable(name="pallas", rsnn_cell=ops.rsnn_cell, ff_matmul=ff,
+                   fc=fc, mxu_aligned=True)
+
+
+@register("sparse")
+def _build_sparse(ctx: BackendContext) -> OpTable:
+    """Pallas cells/stimulus + the fused zero-skip CSC readout."""
+    ctx = dataclasses.replace(ctx, sparse_fc=True)
+    return _build_pallas(ctx)._replace(name="sparse")

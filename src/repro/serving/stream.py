@@ -21,11 +21,20 @@ Lifecycle
    concatenated utterance is the engine's correctness contract
    (tests/test_stream.py).
 
-Execution paths (``EngineConfig``): ``backend`` selects per-layer between
-the fused Pallas kernels (``kernels/ops``) and the jnp oracles
-(``kernels/ref``); ``precision`` selects float weights or the packed int4
-model from ``core/sparse.py``; ``sparse_fc`` additionally routes the pruned
-FC through the zero-skipping CSC gather.
+Execution paths (``EngineConfig``): ``backend`` names a registered entry in
+``serving/backends.py`` — ``ref``/``jnp`` (oracles), ``pallas`` (fused
+kernels), ``sparse`` (pallas + the fused zero-skip CSC FC of
+``kernels/sparse_fc.py``) — which resolves to a uniform op table
+(``rsnn_cell`` / ``ff_matmul`` / ``fc``) per layer and per precision;
+``precision`` selects float weights or the packed int4 model from
+``core/sparse.py``; ``sparse_fc`` additionally routes the pruned FC through
+the zero-skipping CSC path of the chosen backend.  New kernels plug in by
+registering a backend; the engine itself never selects kernels.
+
+Scaling out: ``serving/sharded.py`` runs this same engine with the slot
+batch, recurrent state, and pinned frame buffer sharded over a device mesh
+(weights replicated via ``place_weights``), and ``data/featurize.py``
+prefetches quantized frames ahead of the slot loop.
 
 Sparsity counters -> MMAC/s
 ---------------------------
@@ -53,27 +62,32 @@ from repro.core.compression.compress import (CompressionConfig,
                                              init_compression)
 from repro.core.lif import LIFState
 from repro.core.rsnn import RSNNConfig, RSNNState
-from repro.kernels import ops, ref
+from repro.serving import backends
 
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
     """Execution-path selection for CompiledRSNN."""
 
-    backend: str = "jnp"  # "jnp" (kernels/ref oracles) | "pallas" (fused)
+    backend: str = "jnp"  # registered name in serving/backends.py
     precision: str = "float"  # "float" | "int4" (packed model from sparse.py)
-    sparse_fc: bool = False  # zero-skip CSC gather for the pruned FC (jnp)
+    sparse_fc: bool = False  # zero-skip CSC path for the pruned FC
     input_scale: float | jax.Array | None = None  # static 8-bit calibration
 
     def __post_init__(self):
-        if self.backend not in ("jnp", "pallas"):
-            raise ValueError(f"unknown backend {self.backend!r}")
+        if self.backend not in backends.available():
+            raise ValueError(f"unknown backend {self.backend!r}; "
+                             f"available: {backends.available()}")
         if self.precision not in ("float", "int4"):
             raise ValueError(f"unknown precision {self.precision!r}")
-        if self.sparse_fc and (self.precision != "int4"
-                               or self.backend != "jnp"):
-            raise ValueError("sparse_fc is the jnp zero-skip path over the "
-                             "int4 model (precision='int4', backend='jnp')")
+        if self.wants_sparse_fc and self.precision != "int4":
+            raise ValueError("the zero-skip CSC FC runs over the packed "
+                             "int4 model (set precision='int4')")
+
+    @property
+    def wants_sparse_fc(self) -> bool:
+        """The CSC zero-skip readout: the flag, or the dedicated backend."""
+        return self.sparse_fc or self.backend == "sparse"
 
 
 def calibrate_input_scale(features: jax.Array, bits: int = 8) -> jax.Array:
@@ -115,7 +129,7 @@ class CompiledRSNN:
             if cstate is None:
                 cstate = init_compression(params, ccfg)
             self.packed = sparse.pack_model(params, cfg, ccfg, cstate)
-            if engine.sparse_fc and "fc_w" not in self.packed.sparse:
+            if engine.wants_sparse_fc and "fc_w" not in self.packed.sparse:
                 raise ValueError("sparse_fc needs an unstructured-pruned "
                                  "fc_w (set ccfg.fc_prune_frac > 0)")
             missing = set(cfg.layer_shapes) - set(self.packed.quant)
@@ -123,18 +137,21 @@ class CompiledRSNN:
                 raise ValueError(
                     f"int4 engine needs every layer weight quantized; "
                     f"missing from ccfg.quant_names: {sorted(missing)}")
-            # dense-dequant copies only where the engine consumes dense
+            # dense-dequant copies only where the backend consumes dense
             # weights: the recurrent cell always does (paper type-D: no skip
-            # at TS=2); the jnp backend's feedforward stimulus does too.
-            # Dequant is bit-exact with QAT fake-quant.
+            # at TS=2); backends that declare dense_stimulus (the ref
+            # oracles) need the feedforward weights too.  Dequant is
+            # bit-exact with QAT fake-quant.
             dense_needed = {"l0_wh", "l1_wh"}
-            if engine.backend == "jnp":
+            if backends.needs_dense_stimulus(engine.backend):
                 dense_needed |= {"l0_wx", "l1_wx"}
-            self._w = {n: sparse.dequantize(self.packed.quant[n])
-                       for n in dense_needed}
+            dense = {n: sparse.dequantize(self.packed.quant[n])
+                     for n in dense_needed}
+            quant, csc = dict(self.packed.quant), dict(self.packed.sparse)
             self._lif = self.packed.lif
         else:
-            self._w = {n: params[n] for n in cfg.layer_shapes}
+            dense = {n: params[n] for n in cfg.layer_shapes}
+            quant, csc = {}, {}
             self._lif = {}
             for i in (0, 1):
                 beta, vth = lif_lib.inference_constants(params[f"lif{i}"],
@@ -142,18 +159,45 @@ class CompiledRSNN:
                 self._lif[f"beta{i}"] = beta
                 self._lif[f"vth{i}"] = vth
 
+        self._ctx = backends.BackendContext(
+            cfg=cfg, precision=engine.precision,
+            sparse_fc=engine.wants_sparse_fc, dense=dense, quant=quant,
+            sparse=csc)
+        self.ops = backends.resolve(engine.backend, self._ctx)
+        self._w = self._ctx.dense
+
         # deployed FC pruning fraction, for measured-MMAC/s accounting
         self.fc_prune_frac = (ccfg.fc_prune_frac
                               if engine.precision == "int4" else 0.0)
         scale = engine.input_scale
         self._input_scale = None if scale is None else jnp.asarray(scale)
+        self._compile()
+
+    def _compile(self) -> None:
         self._step = jax.jit(self._frame_step)
+        self._step_masked = jax.jit(self._masked_frame_step)
         self._run = jax.jit(self._run_scan)
+
+    def place_weights(self, sharding) -> None:
+        """``jax.device_put`` every deployed array (dense/quant/CSC weights,
+        LIF constants, input scale) with ``sharding`` — e.g. replicated over
+        a serving mesh — then re-resolve the op table and re-jit so the
+        compiled steps capture the placed copies."""
+        put = lambda tree: jax.device_put(tree, sharding)  # noqa: E731
+        self._ctx = dataclasses.replace(
+            self._ctx, dense=put(self._ctx.dense), quant=put(self._ctx.quant),
+            sparse=put(self._ctx.sparse))
+        self.ops = backends.resolve(self.engine.backend, self._ctx)
+        self._w = self._ctx.dense
+        self._lif = put(self._lif)
+        if self._input_scale is not None:
+            self._input_scale = put(self._input_scale)
+        self._compile()
 
     # ------------------------------------------------------------ frontend
 
     def init_state(self, batch: int) -> RSNNState:
-        if self.engine.backend == "pallas":
+        if self.ops.mxu_aligned:
             # MXU tiling contract of the fused kernels: a batch over 128
             # must be a multiple of the 128-row block (rsnn_cell's b-grid;
             # the int4 path also folds TS into the matmul M dim).
@@ -186,22 +230,14 @@ class CompiledRSNN:
 
     # ------------------------------------------------------- layer dispatch
 
-    def _kernels(self):
-        if self.engine.backend == "pallas":
-            return ops.rsnn_cell, ops.int4_matmul, ops.merged_spike_fc
-        return ref.rsnn_cell_ref, ref.int4_matmul_ref, ref.merged_spike_fc_ref
-
-    def _ff_matmul(self, x2d: jax.Array, name: str) -> jax.Array:
-        """Feedforward stimulus x @ W on the selected path. x2d: (M, K)."""
-        _, i4mm, _ = self._kernels()
-        if self.packed is not None and self.engine.backend == "pallas":
-            qt = self.packed.quant[name]
-            return i4mm(x2d, qt.packed, qt.scale.reshape(-1))
-        return x2d @ self._w[name]
-
     def _frame_step(self, state: RSNNState, x_t: jax.Array):
-        """One quantized frame x_t (B, input_dim) -> (state, logits, aux)."""
-        cell, _, mfc = self._kernels()
+        """One quantized frame x_t (B, input_dim) -> (state, logits, aux).
+
+        Every kernel choice goes through ``self.ops`` (the op table the
+        backend registry resolved at construction) — the engine itself is
+        backend-agnostic.
+        """
+        cell, ff, fc = self.ops.rsnn_cell, self.ops.ff_matmul, self.ops.fc
         w = self._w
         lif = self._lif
         ts = state.h0.shape[0]
@@ -209,43 +245,42 @@ class CompiledRSNN:
         h = self.cfg.hidden_dim
 
         # L0: feedforward stimulus once per frame, shared across time steps
-        ff0 = self._ff_matmul(x_t, "l0_wx")  # (B, H)
+        ff0 = ff(x_t, "l0_wx")  # (B, H)
         stim0 = jnp.broadcast_to(ff0[None], (ts, b, h))
         s0, u0 = cell(stim0, state.h0, w["l0_wh"], state.lif0.u,
                       state.lif0.spike, lif["beta0"], lif["vth0"])
         lif0 = LIFState(u=u0, spike=s0[-1])
 
         # L1: per-ts feedforward from L0 spikes + recurrent
-        stim1 = self._ff_matmul(s0.reshape(ts * b, h), "l1_wx").reshape(ts, b, h)
+        stim1 = ff(s0.reshape(ts * b, h), "l1_wx").reshape(ts, b, h)
         s1, u1 = cell(stim1, state.h1, w["l1_wh"], state.lif1.u,
                       state.lif1.spike, lif["beta1"], lif["vth1"])
         lif1 = LIFState(u=u1, spike=s1[-1])
 
-        # FC readout
-        if self.engine.sparse_fc:
-            merged = spike_ops.merge_spikes(s1)
-            logits = sparse.sparse_matmul(merged, self.packed.sparse["fc_w"])
-        elif self.packed is not None:
-            qt = self.packed.quant["fc_w"]
-            if self.cfg.merged_spike:
-                logits = mfc(s1, qt.packed, qt.scale.reshape(-1))
-            else:
-                _, i4mm, _ = self._kernels()
-                logits = sum(i4mm(s1[t], qt.packed, qt.scale.reshape(-1))
-                             for t in range(ts))
-        elif self.cfg.merged_spike:
-            logits = spike_ops.merged_spike_fc(s1, w["fc_w"])
-        else:
-            logits = (s1 @ w["fc_w"]).sum(axis=0)
+        logits = fc(s1)
 
         aux = _frame_counters(x_t, s0, s1, self.cfg.input_bits)
         return RSNNState(h0=s0, h1=s1, lif0=lif0, lif1=lif1), logits, aux
+
+    def _masked_frame_step(self, state: RSNNState, x_t: jax.Array,
+                           active: jax.Array):
+        state, logits, aux = self._frame_step(state, x_t)
+        return state, logits, pack_step_aux(aux, active)
 
     # ------------------------------------------------------------ execution
 
     def step(self, state: RSNNState, x_q: jax.Array):
         """Advance every slot by one quantized frame. x_q: (B, input_dim)."""
         return self._step(state, x_q)
+
+    def step_masked(self, state: RSNNState, x_q: jax.Array,
+                    active: jax.Array):
+        """``step`` with device-side idle-slot masking of the counters:
+        returns (state, logits, packed counter vector) where the vector is
+        already masked to active slots and reduced — one small host
+        transfer per step instead of one per counter key (see
+        ``pack_step_aux``/``unpack_step_aux``)."""
+        return self._step_masked(state, x_q, active)
 
     def _run_scan(self, state: RSNNState, xq: jax.Array):
         def body(st, x_t):
@@ -277,6 +312,29 @@ def _frame_counters(x_t: jax.Array, s0: jax.Array, s1: jax.Array,
         "union_l1": s1.max(axis=0).sum(axis=1),  # (B,)
         "input_one_bits": one_bits.astype(jnp.float32),  # (B,)
     }
+
+
+def pack_step_aux(aux: dict, active: jax.Array) -> jax.Array:
+    """Mask the per-slot counters of one step by ``active`` and reduce over
+    slots, packed into one flat device vector: ``[spikes_l0 (TS,),
+    spikes_l1 (TS,), union_l1, input_one_bits]``.  The slot loops fetch this
+    single vector per step instead of one host round-trip per counter key.
+    """
+    act = active.astype(jnp.float32)
+    return jnp.concatenate([
+        (aux["spikes_l0"] * act).sum(axis=-1),
+        (aux["spikes_l1"] * act).sum(axis=-1),
+        (aux["union_l1"] * act).sum(axis=-1)[None],
+        (aux["input_one_bits"] * act).sum(axis=-1)[None],
+    ])
+
+
+def unpack_step_aux(vec, num_ts: int) -> dict:
+    """Host-side inverse of ``pack_step_aux`` -> the dict
+    ``complexity.SparsityCounters.update`` consumes."""
+    v = np.asarray(vec)
+    return {"spikes_l0": v[:num_ts], "spikes_l1": v[num_ts:2 * num_ts],
+            "union_l1": v[2 * num_ts], "input_one_bits": v[2 * num_ts + 1]}
 
 
 # ---------------------------------------------------------------------------
@@ -319,17 +377,25 @@ class StreamLoop:
         self.slot_req: list[StreamRequest | None] = [None] * batch_slots
         self.slot_pos = [0] * batch_slots
         self._next_sid = 0
-        cfg = engine.cfg
-        self.counters = complexity.SparsityCounters(
-            num_ts=cfg.num_ts, hidden_dim=cfg.hidden_dim,
-            input_dim=cfg.input_dim, input_bits=cfg.input_bits)
-        self.steps = 0
+        self.reset_metrics()
 
     def submit(self, frames: np.ndarray) -> int:
+        return self._enqueue(self._validate_frames(frames))
+
+    def _validate_frames(self, frames) -> np.ndarray:
+        frames = np.asarray(frames)
+        d = self.engine.cfg.input_dim
+        if frames.ndim != 2 or frames.shape[-1] != d:
+            # fail at submit time, not as a broadcast error deep in step_once
+            raise ValueError(
+                f"frames must have shape (T, input_dim={d}); "
+                f"got {frames.shape}")
+        return frames
+
+    def _enqueue(self, frames: np.ndarray) -> int:
         sid = self._next_sid
         self._next_sid += 1
-        req = StreamRequest(sid, np.asarray(frames),
-                            fc_dim=self.engine.cfg.fc_dim)
+        req = StreamRequest(sid, frames, fc_dim=self.engine.cfg.fc_dim)
         if len(req.frames) == 0:  # empty utterance: nothing to stream
             req.done = True
             self.finished.append(req)
@@ -340,9 +406,27 @@ class StreamLoop:
     def _refill(self) -> None:
         for i in range(self.slots):
             if self.slot_req[i] is None and self.queue:
-                self.slot_req[i] = self.queue.pop(0)
+                req = self.queue.pop(0)
+                self.slot_req[i] = req
                 self.slot_pos[i] = 0
                 self.state = reset_slot(self.state, i)
+                self._on_slot_filled(i, req)
+
+    def _on_slot_filled(self, i: int, req: StreamRequest) -> None:
+        """Hook for subclasses (e.g. pinning the slot's frames on device)."""
+
+    def _dispatch_step(self, active: np.ndarray):
+        """Advance the engine one frame over all slots.  Returns
+        (logits (slots, fc_dim) np, packed masked counter vector)."""
+        d = self.engine.cfg.input_dim
+        x = np.zeros((self.slots, d), np.float32)
+        for i, r in enumerate(self.slot_req):
+            if r is not None:
+                x[i] = r.frames[self.slot_pos[i]]
+        xq = self.engine.quantize_features(jnp.asarray(x))
+        self.state, logits, aux_vec = self.engine.step_masked(
+            self.state, xq, jnp.asarray(active))
+        return np.asarray(logits), aux_vec
 
     def step_once(self) -> bool:
         """One engine step over all slots; returns False when fully drained."""
@@ -350,18 +434,10 @@ class StreamLoop:
         active = np.array([r is not None for r in self.slot_req], bool)
         if not active.any():
             return False
-        d = self.engine.cfg.input_dim
-        x = np.zeros((self.slots, d), np.float32)
-        for i, r in enumerate(self.slot_req):
-            if r is not None:
-                x[i] = r.frames[self.slot_pos[i]]
-        xq = self.engine.quantize_features(jnp.asarray(x))
-        self.state, logits, aux = self.engine.step(self.state, xq)
+        logits_np, aux_vec = self._dispatch_step(active)
         self.steps += 1
-        logits_np = np.asarray(logits)
-        act = jnp.asarray(active, jnp.float32)
         self.counters.update(
-            {k: np.asarray((v * act).sum(axis=-1)) for k, v in aux.items()},
+            unpack_step_aux(aux_vec, self.engine.cfg.num_ts),
             active_frames=float(active.sum()))
         for i, r in enumerate(self.slot_req):
             if r is None:
@@ -382,6 +458,14 @@ class StreamLoop:
         return sorted(self.finished, key=lambda r: r.sid)
 
     # --------------------------------------------------- measured complexity
+
+    def reset_metrics(self) -> None:
+        """Zero the measured-traffic counters (e.g. after a warmup run)."""
+        cfg = self.engine.cfg
+        self.counters = complexity.SparsityCounters(
+            num_ts=cfg.num_ts, hidden_dim=cfg.hidden_dim,
+            input_dim=cfg.input_dim, input_bits=cfg.input_bits)
+        self.steps = 0
 
     def sparsity_profile(self) -> complexity.SparsityProfile:
         return self.counters.profile()

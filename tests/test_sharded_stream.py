@@ -1,0 +1,193 @@
+"""Sharded serving: ShardedStreamLoop logits identical to the single-device
+StreamLoop, on a 1-device mesh in-process and on 8 virtual CPU devices in a
+subprocess (XLA_FLAGS=--xla_force_host_platform_device_count=8 — the flag
+must be set before jax initializes, hence the subprocess).  Plus the async
+featurization front-end and submit-time validation."""
+
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import rsnn
+from repro.data.featurize import AsyncFeaturizer
+from repro.serving import stream as S
+from repro.serving.sharded import ShardedStreamLoop, stream_mesh
+
+
+def _utterances(cfg, lens, seed=7):
+    rng = np.random.default_rng(seed)
+    return [rng.normal(size=(t, cfg.input_dim)).astype(np.float32)
+            for t in lens]
+
+
+@pytest.fixture
+def setup(small_cfg, rng_key):
+    params = rsnn.init_params(rng_key, small_cfg)
+    utts = _utterances(small_cfg, [5, 9, 3, 7, 6])
+    scale = S.calibrate_input_scale(jnp.asarray(np.concatenate(utts, 0)))
+    return small_cfg, params, utts, scale
+
+
+# ------------------------------------------------- single-device mesh parity
+
+
+def test_sharded_loop_matches_streamloop_one_device(setup):
+    """Same scheduling, same logits, same counters on a 1-device mesh."""
+    cfg, params, utts, scale = setup
+    eng1 = S.CompiledRSNN(cfg, params, S.EngineConfig(input_scale=scale))
+    loop1 = S.StreamLoop(eng1, batch_slots=2)
+    for u in utts:
+        loop1.submit(u)
+    done1 = loop1.run()
+
+    eng2 = S.CompiledRSNN(cfg, params, S.EngineConfig(input_scale=scale))
+    loop2 = ShardedStreamLoop(eng2, batch_slots=2, max_frames=16)
+    for u in utts:
+        loop2.submit(u)
+    done2 = loop2.run()
+
+    assert [r.sid for r in done2] == [r.sid for r in done1]
+    for a, b in zip(done1, done2):
+        np.testing.assert_array_equal(a.stacked_logits(), b.stacked_logits())
+    assert loop2.steps == loop1.steps
+    assert loop2.counters.frames == loop1.counters.frames
+    p1, p2 = loop1.sparsity_profile(), loop2.sparsity_profile()
+    np.testing.assert_allclose(p2.l0_density, p1.l0_density, rtol=1e-6)
+    np.testing.assert_allclose(p2.input_bit_density, p1.input_bit_density,
+                               rtol=1e-6)
+    assert loop2.mmac_per_second(0.4) == pytest.approx(
+        loop1.mmac_per_second(0.4))
+
+
+def test_async_featurizer_front_end_is_bit_transparent(setup):
+    """Prefetch-quantized submissions (AsyncFeaturizer + quantized=True)
+    == raw submissions quantized inside the loop."""
+    cfg, params, utts, scale = setup
+    eng1 = S.CompiledRSNN(cfg, params, S.EngineConfig(input_scale=scale))
+    loop1 = ShardedStreamLoop(eng1, batch_slots=2, max_frames=16)
+    for u in utts:
+        loop1.submit(u)
+    done1 = loop1.run()
+
+    eng2 = S.CompiledRSNN(cfg, params, S.EngineConfig(input_scale=scale))
+    loop2 = ShardedStreamLoop(eng2, batch_slots=2, max_frames=16)
+    feat = AsyncFeaturizer(
+        utts, lambda u: np.asarray(eng2.quantize_features(jnp.asarray(u))))
+    sids = loop2.submit_stream(feat, quantized=True)
+    done2 = loop2.run()
+
+    assert sids == [r.sid for r in done2]
+    for a, b in zip(done1, done2):
+        np.testing.assert_array_equal(a.stacked_logits(), b.stacked_logits())
+
+
+def test_async_featurizer_preserves_order_and_values():
+    utts = [np.full((3, 4), i, np.float32) for i in range(6)]
+    feat = AsyncFeaturizer(utts, lambda u: u * 2.0, depth=2)
+    out = list(feat)
+    assert len(out) == 6
+    for i, o in enumerate(out):
+        np.testing.assert_array_equal(o, utts[i] * 2.0)
+
+
+def test_async_featurizer_propagates_worker_error():
+    def boom(u):
+        raise RuntimeError("featurization failed")
+
+    feat = AsyncFeaturizer([np.zeros((2, 4), np.float32)], boom)
+    with pytest.raises(RuntimeError, match="featurization failed"):
+        list(feat)
+
+
+# ------------------------------------------------------------- validation
+
+
+def test_sharded_submit_rejects_wrong_feature_dim(setup):
+    cfg, params, _, scale = setup
+    eng = S.CompiledRSNN(cfg, params, S.EngineConfig(input_scale=scale))
+    loop = ShardedStreamLoop(eng, batch_slots=2, max_frames=16)
+    with pytest.raises(ValueError, match="input_dim"):
+        loop.submit(np.zeros((5, cfg.input_dim + 1), np.float32))
+    with pytest.raises(ValueError, match="input_dim"):
+        loop.submit(np.zeros((cfg.input_dim,), np.float32))
+
+
+def test_sharded_submit_rejects_buffer_overflow(setup):
+    cfg, params, _, scale = setup
+    eng = S.CompiledRSNN(cfg, params, S.EngineConfig(input_scale=scale))
+    loop = ShardedStreamLoop(eng, batch_slots=2, max_frames=8)
+    with pytest.raises(ValueError, match="max_frames"):
+        loop.submit(np.zeros((9, cfg.input_dim), np.float32))
+
+
+def test_batch_slots_must_tile_mesh(setup):
+    cfg, params, _, scale = setup
+    eng = S.CompiledRSNN(cfg, params, S.EngineConfig(input_scale=scale))
+    mesh = stream_mesh(jax.devices())
+    with pytest.raises(ValueError, match="multiple"):
+        ShardedStreamLoop(eng, batch_slots=0, mesh=mesh)
+
+
+# ------------------------------------------- 8 virtual devices (subprocess)
+
+
+_EIGHT_DEVICE_PARITY = """
+    import numpy as np, jax, jax.numpy as jnp
+    assert len(jax.devices()) == 8, jax.devices()
+    from repro.core import rsnn
+    from repro.core.rsnn import RSNNConfig
+    from repro.serving import stream as S
+    from repro.serving.sharded import ShardedStreamLoop
+
+    cfg = RSNNConfig(input_dim=8, hidden_dim=16, fc_dim=12, num_ts=2)
+    params = rsnn.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(7)
+    utts = [rng.normal(size=(t, cfg.input_dim)).astype(np.float32)
+            for t in [5, 9, 3, 7, 6, 12, 4, 8, 10, 6]]
+    scale = S.calibrate_input_scale(jnp.asarray(np.concatenate(utts, 0)))
+
+    eng1 = S.CompiledRSNN(cfg, params, S.EngineConfig(input_scale=scale))
+    loop1 = S.StreamLoop(eng1, batch_slots=8)
+    for u in utts:
+        loop1.submit(u)
+    done1 = loop1.run()
+
+    eng2 = S.CompiledRSNN(cfg, params, S.EngineConfig(input_scale=scale))
+    loop2 = ShardedStreamLoop(eng2, batch_slots=8, max_frames=16)
+    assert loop2.mesh.shape["data"] == 8
+    for u in utts:
+        loop2.submit(u)
+    done2 = loop2.run()
+
+    # the slot state really lives sharded across the mesh
+    spec = loop2.state.h0.sharding.spec
+    assert "data" in str(spec), spec
+    for a, b in zip(done1, done2):
+        assert a.sid == b.sid
+        np.testing.assert_array_equal(a.stacked_logits(), b.stacked_logits())
+    assert loop2.steps == loop1.steps
+    assert loop2.counters.frames == loop1.counters.frames
+    print("PARITY_OK", len(done2), loop2.steps)
+"""
+
+
+def test_sharded_loop_identical_on_eight_virtual_devices():
+    """Sharded StreamLoop over an 8-device mesh produces logits identical
+    to the single-device engine on the same utterance set (acceptance
+    criterion of the sharded serving path)."""
+    src = str(Path(__file__).resolve().parents[1] / "src")
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               JAX_PLATFORMS="cpu", PYTHONPATH=src)
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(_EIGHT_DEVICE_PARITY)],
+        capture_output=True, text=True, env=env, timeout=420)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "PARITY_OK" in out.stdout

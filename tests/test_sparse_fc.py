@@ -1,0 +1,90 @@
+"""Fused sparse-FC Pallas kernel: interpret-mode parity against the CSC
+oracles (kernels/ref + core.sparse.sparse_matmul) and the dense matmul,
+over an nnz-density x N x B sweep, plus padded/degenerate edge cases.
+Fast tier."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sparse
+from repro.kernels import ops, ref
+from repro.kernels import sparse_fc as sfc_lib
+
+
+def _random_csc(h, n, density, seed):
+    rng = np.random.default_rng(seed)
+    q = rng.integers(-8, 8, (h, n))
+    q = q * (rng.random((h, n)) < density)
+    scale = rng.uniform(0.01, 0.1, n).astype(np.float32)
+    return q, sparse.sparsify_columns(jnp.asarray(q), scale)
+
+
+@pytest.mark.parametrize("density", [0.1, 0.5, 0.9])
+@pytest.mark.parametrize("n", [64, 256])
+@pytest.mark.parametrize("b", [8, 128])
+def test_sparse_fc_parity_sweep(density, n, b):
+    """Kernel == CSC oracles (bit-compatible gather) == dense matmul, with
+    interpret=True pinned and a multi-tile grid (block sizes < B, N)."""
+    h, ts = 64, 2
+    q, sc = _random_csc(h, n, density, seed=b + n + int(density * 10))
+    rng = np.random.default_rng(1)
+    s = jnp.asarray(rng.integers(0, 2, (ts, b, h)), jnp.float32)
+
+    o_k = sfc_lib.sparse_fc(s, sc.indices, sc.values, sc.scale,
+                            block_b=min(64, b), block_n=min(64, n),
+                            interpret=True)
+    o_ref = ref.sparse_fc_ref(s, sc.indices, sc.values, sc.scale)
+    o_csc = sparse.sparse_matmul(s.sum(axis=0), sc)
+    dense = s.sum(axis=0) @ (jnp.asarray(q, jnp.float32) * sc.scale)
+
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_ref),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_csc),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(dense),
+                               rtol=1e-4, atol=1e-4)
+    # the padded layout really skips: fewer gathered rows than K at low
+    # density (zero-skip work ∝ nnz, not K*N)
+    if density <= 0.5:
+        assert sc.indices.shape[0] < h
+
+
+def test_sparse_fc_all_zero_column_is_exact_zero():
+    """A fully pruned output channel pads to (index 0, value 0) and must
+    produce exactly 0.0 — no contribution from the padding rows."""
+    h, n, b = 32, 16, 4
+    q, _ = _random_csc(h, n, 0.6, seed=3)
+    q[:, 5] = 0
+    scale = np.full(n, 0.07, np.float32)
+    sc = sparse.sparsify_columns(jnp.asarray(q), scale)
+    s = jnp.ones((2, b, h), jnp.float32)  # every spike fires: worst case
+    o_k = np.asarray(ops.sparse_fc(s, sc.indices, sc.values, sc.scale))
+    assert (o_k[:, 5] == 0.0).all()
+    dense = np.asarray(s.sum(axis=0) @ (jnp.asarray(q, jnp.float32) * scale))
+    np.testing.assert_allclose(o_k, dense, rtol=1e-5, atol=1e-5)
+
+
+def test_sparse_fc_all_zero_matrix():
+    """Degenerate fully-pruned matrix (nnz_max clamps to 1) -> zeros."""
+    h, n, b = 16, 8, 4
+    sc = sparse.sparsify_columns(jnp.zeros((h, n), jnp.int32),
+                                 np.ones(n, np.float32))
+    assert sc.indices.shape[0] == 1
+    s = jnp.ones((2, b, h), jnp.float32)
+    o_k = np.asarray(ops.sparse_fc(s, sc.indices, sc.values, sc.scale))
+    assert (o_k == 0.0).all()
+
+
+def test_sparse_fc_premerged_input_matches_ts_path():
+    """The (B, H) pre-merged entry point == merging (TS, B, H) in-kernel."""
+    h, n, b = 32, 64, 8
+    _, sc = _random_csc(h, n, 0.4, seed=11)
+    rng = np.random.default_rng(2)
+    s = jnp.asarray(rng.integers(0, 2, (2, b, h)), jnp.float32)
+    o_ts = ops.sparse_fc(s, sc.indices, sc.values, sc.scale)
+    o_2d = ops.sparse_fc(s.sum(axis=0), sc.indices, sc.values, sc.scale)
+    np.testing.assert_array_equal(np.asarray(o_ts), np.asarray(o_2d))
+    r_2d = ref.sparse_fc_ref(s.sum(axis=0), sc.indices, sc.values, sc.scale)
+    np.testing.assert_allclose(np.asarray(o_2d), np.asarray(r_2d),
+                               rtol=1e-6, atol=1e-6)

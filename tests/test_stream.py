@@ -241,6 +241,69 @@ def test_packed_size_report(setup):
             params, ccfg, cstate) + 1e-6
 
 
+# ----------------------------------------------------- backend registry
+
+
+def test_backend_registry_names_and_unknown():
+    from repro.serving import backends
+    names = backends.available()
+    for required in ("jnp", "ref", "pallas", "sparse"):
+        assert required in names
+    with pytest.raises(ValueError, match="unknown backend"):
+        S.EngineConfig(backend="mosaic")
+
+
+def test_sparse_backend_matches_qat(setup):
+    """backend='sparse' (pallas cells + fused zero-skip CSC FC kernel)
+    agrees with the QAT oracle like the other compressed paths."""
+    cfg, params, x, scale = setup
+    ccfg, cstate = _compression(params)
+    want, _, _ = rsnn.forward(materializer(ccfg, cstate)(params), x, cfg)
+    eng = S.CompiledRSNN(cfg, params,
+                         S.EngineConfig(backend="sparse", precision="int4",
+                                        input_scale=scale), ccfg, cstate)
+    assert eng.ops.name == "sparse"
+    got, _, _ = eng.run(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_sparse_backend_requires_int4():
+    with pytest.raises(ValueError, match="int4"):
+        S.EngineConfig(backend="sparse", precision="float")
+
+
+def test_submit_rejects_wrong_feature_dim(setup):
+    """Shape mismatch fails loudly at submit time, not as a broadcast error
+    deep inside step_once."""
+    cfg, params, x, scale = setup
+    eng = S.CompiledRSNN(cfg, params, S.EngineConfig(input_scale=scale))
+    loop = S.StreamLoop(eng, batch_slots=2)
+    with pytest.raises(ValueError, match="input_dim"):
+        loop.submit(np.zeros((5, cfg.input_dim + 1), np.float32))
+    with pytest.raises(ValueError, match="input_dim"):
+        loop.submit(np.zeros((cfg.input_dim,), np.float32))  # 1-D
+    loop.submit(np.zeros((5, cfg.input_dim), np.float32))  # valid
+
+
+def test_step_aux_pack_roundtrip_matches_per_key_masking(setup):
+    """The packed device-side counter vector == the old per-key host
+    masking ((v * active).sum per key), bit for bit."""
+    cfg, params, x, scale = setup
+    eng = S.CompiledRSNN(cfg, params, S.EngineConfig(input_scale=scale))
+    state = eng.init_state(2)
+    xq = eng.quantize_features(x[:, 0])
+    active = np.array([True, False])
+    _, logits_m, vec = eng.step_masked(state, xq, jnp.asarray(active))
+    _, logits, aux = eng.step(state, xq)
+    np.testing.assert_array_equal(np.asarray(logits_m), np.asarray(logits))
+    got = S.unpack_step_aux(vec, cfg.num_ts)
+    act = jnp.asarray(active, jnp.float32)
+    for k, v in aux.items():
+        want = np.asarray((v * act).sum(axis=-1))
+        np.testing.assert_array_equal(np.asarray(got[k]), want)
+
+
 # ------------------------------------------------------- sparsity accounting
 
 
