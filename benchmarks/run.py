@@ -1,11 +1,14 @@
 """Benchmark driver: one entry per paper table/figure + roofline summary.
 
 Prints ``name,us_per_call,derived`` CSV lines (us_per_call only for the
-timed entries; analytic tables report 0).
+timed entries; analytic tables report 0).  ``--only SUBSTR`` restricts the
+run to matching entries (the CI smoke runs ``--only bench_stream_pipeline``
+to keep the pipelined-serving row honest on every push).
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import sys
 from pathlib import Path
@@ -15,30 +18,38 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
 from benchmarks import paper_tables as T  # noqa: E402
 
+ANALYTIC = ("table1_dimensions", "fig12_model_size", "fig13_complexity",
+            "fig14_error_ablation", "fig16_time_steps", "fig17_cycles",
+            "fig18_sparsity", "table2_weight_access", "table3_power")
+
+TIMED = (("bench_rsnn_forward", "bench_rsnn_forward"),
+         ("bench_merged_spike_fc", "bench_kernels"),
+         ("bench_sparse_fc", "bench_sparse_fc"),
+         ("bench_stream_engine", "bench_stream_engine"),
+         ("bench_stream_sharded", "bench_stream_sharded"),
+         ("bench_stream_pipeline", "bench_stream_pipeline"))
+
 
 def _emit(name: str, us: float, derived) -> None:
     print(f"{name},{us:.2f},{json.dumps(derived, default=str)}")
 
 
-def main() -> None:
+def main(only: str | None = None) -> None:
     print("name,us_per_call,derived")
-    for name in ("table1_dimensions", "fig12_model_size", "fig13_complexity",
-                 "fig14_error_ablation", "fig16_time_steps", "fig17_cycles",
-                 "fig18_sparsity", "table2_weight_access", "table3_power"):
+    for name in ANALYTIC:
+        if only and only not in name:
+            continue
         rows, derived = getattr(T, name)()
         _emit(name, 0.0, {"rows": rows, **derived})
 
-    us, d = T.bench_rsnn_forward()
-    _emit("bench_rsnn_forward", us, d)
-    us, d = T.bench_kernels()
-    _emit("bench_merged_spike_fc", us, d)
-    us, d = T.bench_sparse_fc()
-    _emit("bench_sparse_fc", us, d)
-    us, d = T.bench_stream_engine()
-    _emit("bench_stream_engine", us, d)
-    us, d = T.bench_stream_sharded()
-    _emit("bench_stream_sharded", us, d)
+    for name, fn in TIMED:
+        if only and only not in name:
+            continue
+        us, d = getattr(T, fn)()
+        _emit(name, us, d)
 
+    if only and only not in "roofline_summary":
+        return
     # roofline summary (reads results/dryrun)
     try:
         from benchmarks import roofline
@@ -56,4 +67,7 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="run only entries whose name contains this substring")
+    main(ap.parse_args().only)

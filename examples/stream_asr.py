@@ -1,7 +1,8 @@
 """Stream speech through the compressed RSNN in real time.
 
   PYTHONPATH=src python examples/stream_asr.py [--precision int4] \
-      [--backend jnp|ref|pallas|sparse] [--slots 4] [--streams 8] [--sharded]
+      [--backend jnp|ref|pallas|sparse] [--slots 4] [--streams 8] \
+      [--sharded] [--pipeline-depth 2]
 
 Builds the paper's model (optionally packed to the pruned/int4 deployment
 artifact via core/sparse.py), submits a queue of unequal-length synthetic
@@ -14,6 +15,12 @@ the slot batch and recurrent state shard over every local device (set
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for a CPU mesh),
 weights replicate, and an ``AsyncFeaturizer`` thread quantizes utterances
 ahead of the slot loop.
+
+``--pipeline-depth`` selects the step-lifecycle contract (docs/serving.md):
+0 is the v1 synchronous loop (per-frame logit + counter fetches), >= 1 the
+double-buffered contract-v2 loop — logits stay in a device-side ring until
+stream completion and counters accumulate on device, so the report's
+"host syncs/frame" drops from 2 to ~1/stream-length.
 """
 
 import argparse
@@ -52,6 +59,8 @@ def main():
     ap.add_argument("--sharded", action="store_true",
                     help="shard the slot batch over all local devices with "
                          "an async featurization front-end")
+    ap.add_argument("--pipeline-depth", type=int, default=2,
+                    help="in-flight device steps (0 = v1 synchronous loop)")
     args = ap.parse_args()
 
     cfg = RSNNConfig(hidden_dim=args.hidden)
@@ -72,9 +81,12 @@ def main():
     if args.sharded:
         # quantize ahead of the loop on a host thread; starts now, so the
         # front-end overlaps model packing and engine compilation below
+        # (depth per data.featurize.prefetch_depth: slots + pipeline depth)
+        from repro.data.featurize import prefetch_depth
         feat = AsyncFeaturizer(
             utts, lambda u: np.asarray(
-                spike_ops.quantize_input(u, cfg.input_bits, scale)[0]))
+                spike_ops.quantize_input(u, cfg.input_bits, scale)[0]),
+            depth=prefetch_depth(args.slots, args.pipeline_depth))
     engine = CompiledRSNN(
         cfg, params,
         EngineConfig(backend=args.backend, precision=args.precision,
@@ -90,15 +102,18 @@ def main():
     if args.sharded:
         max_frames = max(len(u) for u in utts)
         loop = ShardedStreamLoop(engine, batch_slots=args.slots,
-                                 max_frames=max_frames)
+                                 max_frames=max_frames,
+                                 pipeline_depth=args.pipeline_depth)
         print(f"sharded over {loop.mesh.shape['data']} devices "
-              f"({args.slots} slots, async featurization front-end)")
+              f"({args.slots} slots, pipeline depth {args.pipeline_depth}, "
+              f"async featurization front-end)")
         # submit_stream serves while the featurizer drains, so the timed
         # region must cover it — its steps count toward the totals below
         t0 = time.time()
         loop.submit_stream(feat, quantized=True)
     else:
-        loop = StreamLoop(engine, batch_slots=args.slots)
+        loop = StreamLoop(engine, batch_slots=args.slots,
+                          pipeline_depth=args.pipeline_depth)
         for u in utts:
             loop.submit(u)
         t0 = time.time()
@@ -107,7 +122,9 @@ def main():
 
     frames = int(loop.counters.frames)
     print(f"\nserved {len(done)} streams / {frames} frames in {dt:.2f}s over "
-          f"{loop.steps} engine steps ({args.slots} slots)")
+          f"{loop.steps} engine steps ({args.slots} slots, "
+          f"pipeline depth {args.pipeline_depth}, "
+          f"{loop.host_syncs / frames:.3f} host syncs/frame)")
     print(f"  {frames / dt:.0f} frames/s on CPU -> "
           f"{frames / dt / C.FRAMES_PER_SECOND:.1f} concurrent real-time streams")
     prof = loop.sparsity_profile()

@@ -9,6 +9,14 @@ utterance: a background thread keeps ``depth`` quantized utterances in
 flight while the slot loop burns through engine steps, so a refilled slot
 never waits on featurization.
 
+With the pipelined (contract-v2) slot loops, up to ``pipeline_depth``
+device steps are in flight on top of the ``batch_slots`` streams being
+served, so a refill can be demanded ``pipeline_depth`` dispatches before
+the completing step has even finished on device.  ``prefetch_depth`` sizes
+the queue for that: ``batch_slots + pipeline_depth`` utterances ready, and
+``AsyncFeaturizer.for_loop`` builds a correctly-sized front-end straight
+from a loop.
+
 Because the quantizer is elementwise and deterministic, feeding
 pre-quantized frames (``quantized=True`` at submit) is bit-identical to the
 engine quantizing each packed frame batch itself — the streaming parity
@@ -26,6 +34,20 @@ import numpy as np
 _DONE = object()
 
 
+def prefetch_depth(batch_slots: int, pipeline_depth: int = 2) -> int:
+    """Prefetch depth that keeps a pipelined slot loop fed.
+
+    One quantized utterance ready per slot, plus one per in-flight device
+    step so a refill demanded at dispatch time never waits on the worker:
+
+    >>> prefetch_depth(4, 2)
+    6
+    >>> prefetch_depth(1, 0)  # synchronous v1 loop: still double-buffered
+    2
+    """
+    return max(batch_slots + max(pipeline_depth, 1), 2)
+
+
 class AsyncFeaturizer:
     """Background thread that featurizes/quantizes utterances ahead of use.
 
@@ -35,6 +57,23 @@ class AsyncFeaturizer:
     Iteration yields utterances in submission order; ``close()`` stops the
     worker early (e.g. on error in the consuming loop).
     """
+
+    @classmethod
+    def for_loop(cls, loop, utterances: Iterable[np.ndarray],
+                 featurize: Callable[[np.ndarray], np.ndarray] | None = None,
+                 depth: int | None = None) -> "AsyncFeaturizer":
+        """Front-end sized for a slot loop: ``depth`` defaults to
+        ``prefetch_depth(loop.slots, loop.pipeline_depth)`` and
+        ``featurize`` to the loop engine's static-scale input quantizer
+        (feed the result to ``submit``/``submit_stream`` with
+        ``quantized=True``)."""
+        if featurize is None:
+            engine = loop.engine
+            featurize = lambda u: np.asarray(  # noqa: E731
+                engine.quantize_features(u))
+        if depth is None:
+            depth = prefetch_depth(loop.slots, loop.pipeline_depth)
+        return cls(utterances, featurize, depth=depth)
 
     def __init__(self, utterances: Iterable[np.ndarray],
                  featurize: Callable[[np.ndarray], np.ndarray],

@@ -160,9 +160,10 @@ def stream_state_specs(state, axis: str = "data"):
     Convention of ``core.rsnn.RSNNState``: 3-D+ leaves are (TS, B, H) spike
     trains (slot dim 1), 2-D leaves are (B, H) LIF membrane chains and 1-D
     leaves per-slot scalars (slot dim 0).  ``serving/sharded.py`` places
-    the recurrent state and per-slot cursors with these specs (its pinned
-    (slots, T, d) frame buffer carries the slot dim first and is placed
-    explicitly).
+    the recurrent state and per-slot cursors with these specs; its pinned
+    (slots, T, d) frame buffer and the pipelined contract's on-device logit
+    ring carry the slot dim first and are placed with
+    ``stream_ring_spec``-shaped specs.
     """
 
     def spec(leaf) -> P:
@@ -180,6 +181,16 @@ def stream_shardings(state, mesh, axis: str = "data"):
     return jax.tree.map(lambda s: NamedSharding(mesh, s),
                         stream_state_specs(state, axis),
                         is_leaf=lambda s: isinstance(s, P))
+
+
+def stream_ring_spec(axis: str = "data") -> P:
+    """Spec for the serving loops' slot-major device buffers — the pinned
+    frame buffer ``(slots, max_frames, input_dim)`` and the pipelined
+    contract's on-device logit ring ``(slots, ring_frames, fc_dim)``: the
+    slot dim shards over ``axis``, the per-stream frame rows stay local to
+    the slot's device (each slot's ring rows are harvested as one
+    contiguous slice on stream completion or watermark flush)."""
+    return P(axis, None, None)
 
 
 # --- tree-level helpers -------------------------------------------------------

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.registry import ModelAPI
+from repro.serving.slots import SlotScheduler
 
 
 @dataclasses.dataclass
@@ -77,41 +78,41 @@ class Request:
     done: bool = False
 
 
-class ServeLoop:
+class ServeLoop(SlotScheduler):
     """Slot-based continuous batching over a fixed decode batch.
 
-    Each slot holds one active request; when a request finishes (EOS or
-    max_new), the slot is refilled from the queue and only that slot's
-    cache rows are re-prefilled. Caches here are refreshed by re-running
-    prefill over the active set, which keeps the loop simple and correct;
-    slot-wise cache splicing is a serving-throughput optimization on real
-    hardware."""
+    The queue/slot/finished bookkeeping is ``serving.slots.SlotScheduler``
+    — the same scheduler the streaming RSNN loops run on.  Each slot holds
+    one active request; when a request finishes (EOS or max_new), the slot
+    is refilled from the queue and only that slot's cache rows are
+    re-prefilled. Caches here are refreshed by re-running prefill over the
+    active set, which keeps the loop simple and correct; slot-wise cache
+    splicing is a serving-throughput optimization on real hardware."""
 
     def __init__(self, api: ModelAPI, params, batch_slots: int = 4,
                  scfg: SamplerConfig = SamplerConfig()):
+        super().__init__(batch_slots)
         self.api, self.params, self.scfg = api, params, scfg
-        self.slots = batch_slots
-        self.queue: list[Request] = []
-        self.finished: list[Request] = []
 
     def submit(self, prompt: np.ndarray, max_new: int) -> int:
-        rid = len(self.queue) + len(self.finished)
+        rid = self._new_sid()
         self.queue.append(Request(rid, prompt, max_new))
         return rid
 
     def run(self) -> list[Request]:
-        while self.queue:
-            active = [self.queue.pop(0) for _ in range(min(self.slots, len(self.queue)))]
-            width = max(len(r.prompt) for r in active)
+        while self.has_work:
+            self._refill()
+            active = [(i, r) for i, r in enumerate(self.slot_req)
+                      if r is not None]
+            width = max(len(r.prompt) for _, r in active)
             prompts = np.stack([np.pad(r.prompt, (width - len(r.prompt), 0))
-                                for r in active])
-            steps = max(r.max_new for r in active)
+                                for _, r in active])
+            steps = max(r.max_new for _, r in active)
             toks = generate(self.api, self.params, jnp.asarray(prompts),
                             steps, self.scfg)
-            for r, row in zip(active, toks):
+            for (i, r), row in zip(active, toks):
                 r.out = list(row[: r.max_new])
                 if self.scfg.eos_id >= 0 and self.scfg.eos_id in r.out:
                     r.out = r.out[: r.out.index(self.scfg.eos_id) + 1]
-                r.done = True
-                self.finished.append(r)
+                self._finish_slot(i)
         return self.finished

@@ -9,25 +9,33 @@ engine out:
     (``CompiledRSNN.place_weights`` — the paper's 0.1 MB model is the TPU
     analogue of everything-on-chip, so there is no tensor parallelism to
     pay for); the recurrent slot state shards on its slot dim with
-    ``distributed.sharding.stream_state_specs``.
+    ``distributed.sharding.stream_state_specs``, and the on-device logit
+    ring of the pipelined contract with
+    ``distributed.sharding.stream_ring_spec``.
   * **Pinned frame buffer.**  Each slot owns a row of a device-resident
     ``(slots, max_frames, input_dim)`` buffer of *pre-quantized* frames,
     written once when the slot is (re)filled.  The per-step frame gather
     and idle-slot masking are device-side ops inside the jitted step — the
     host no longer touches frame data on the step path.
-  * **Counters.**  The step masks the per-slot sparsity counters by the
-    active mask and reduces them on device (``stream.pack_step_aux``); one
-    small vector crosses to the host per step.
+  * **Pipelining.**  The inherited contract-v2 loop applies unchanged: up
+    to ``pipeline_depth`` jitted steps stay in flight, per-slot logits
+    accumulate in the sharded ring and cross to the host once per stream
+    (or watermark flush), and the packed counter vector accumulates on
+    device, crossing once per drain.  ``pipeline_depth=0`` keeps the v1
+    per-step fetch path.
   * **Front-end.**  ``data.featurize.AsyncFeaturizer`` quantizes utterances
     on a background thread ahead of the loop; ``submit(..., quantized=True)``
-    accepts its output directly.  Quantization is elementwise with a static
-    scale, so the front-end is bit-transparent.
+    accepts its output directly, and ``AsyncFeaturizer.for_loop`` sizes the
+    prefetch queue to feed the pipeline (``slots + pipeline_depth``).
+    Quantization is elementwise with a static scale, so the front-end is
+    bit-transparent.
 
-Scheduling (queue order, refill-at-step-start, reset-on-finish) is
-*inherited* from ``StreamLoop`` — only the data path is overridden — and
-the jitted step wraps the same ``_frame_step``, so logits are identical to
-the single-device loop on the same utterance set
-(tests/test_sharded_stream.py proves this on 8 virtual devices).
+Scheduling (queue order, refill-at-step-start, reset-on-finish, pipeline
+retirement) is *inherited* from ``StreamLoop`` — only the data path is
+overridden — and the jitted step wraps the same ``_frame_step``, so logits
+are identical to the single-device loop on the same utterance set
+(tests/test_sharded_stream.py proves this on 8 virtual devices, pipelined
+against the synchronous single-device baseline).
 """
 
 from __future__ import annotations
@@ -53,15 +61,18 @@ class ShardedStreamLoop(StreamLoop):
     """Continuous batching over recurrent-state slots sharded on a mesh.
 
     Subclasses ``stream.StreamLoop``: the scheduling layer (submit queue,
-    refill/finish bookkeeping, counters) is inherited verbatim — only the
-    data path is overridden, so "same scheduling, same logits" is
-    structural, not a convention to maintain by hand.  The decode batch,
-    RSNN state, and frame buffer live sharded across the mesh's ``data``
-    axis and every per-step data movement is a device-side op.
+    refill/finish bookkeeping, pipeline retirement, counters) is inherited
+    verbatim — only the data path is overridden, so "same scheduling, same
+    logits" is structural, not a convention to maintain by hand.  The
+    decode batch, RSNN state, frame buffer, and logit ring live sharded
+    across the mesh's ``data`` axis and every per-step data movement is a
+    device-side op.
     """
 
     def __init__(self, engine: CompiledRSNN, batch_slots: int | None = None,
-                 mesh: Mesh | None = None, max_frames: int = 1024):
+                 mesh: Mesh | None = None, max_frames: int = 1024,
+                 pipeline_depth: int = 2, ring_frames: int | None = None,
+                 track_sparsity: bool = True):
         self.mesh = mesh if mesh is not None else stream_mesh()
         ndev = self.mesh.shape["data"]
         slots = batch_slots if batch_slots is not None else ndev
@@ -71,15 +82,38 @@ class ShardedStreamLoop(StreamLoop):
         self.max_frames = max_frames
         self._rep = NamedSharding(self.mesh, P())
         self._slot = NamedSharding(self.mesh, P("data"))
+        self._ctrl = NamedSharding(self.mesh, P(None, "data"))
         engine.place_weights(self._rep)
 
-        super().__init__(engine, batch_slots=slots)
+        # streams are capped at max_frames, so the ring never needs more
+        ring = min(ring_frames if ring_frames is not None else 256,
+                   max_frames)
+        super().__init__(engine, batch_slots=slots,
+                         pipeline_depth=pipeline_depth, ring_frames=ring,
+                         track_sparsity=track_sparsity)
         self.state = jax.device_put(
             self.state, shd.stream_shardings(self.state, self.mesh))
         self._buf = jax.device_put(
             jnp.zeros((slots, max_frames, engine.cfg.input_dim), jnp.float32),
-            NamedSharding(self.mesh, P("data", None, None)))
+            NamedSharding(self.mesh, shd.stream_ring_spec()))
         self._jit_step = jax.jit(self._device_step, donate_argnums=(0,))
+        self._jit_ring_step = jax.jit(self._device_ring_step,
+                                      donate_argnums=(0,))
+        self._jit_ring_quiet = jax.jit(self._device_ring_step_quiet,
+                                       donate_argnums=(0,))
+
+    # --------------------------------------------------- sharded placement
+
+    def _init_ring(self):
+        return jax.device_put(
+            jnp.zeros((self.slots, self.ring_frames, self.engine.cfg.fc_dim),
+                      jnp.float32),
+            NamedSharding(self.mesh, shd.stream_ring_spec()))
+
+    def _zero_aux_acc(self):
+        return jax.device_put(
+            jnp.zeros((2 * self.engine.cfg.num_ts + 2,), jnp.float32),
+            self._rep)
 
     # ------------------------------------------------------------- frontend
 
@@ -124,19 +158,39 @@ class ShardedStreamLoop(StreamLoop):
 
     # ------------------------------------------------------------ step path
 
-    def _device_step(self, state, buf, pos, active):
-        """(state, buffer, per-slot cursor, mask) -> (state, logits, aux)."""
+    def _gather_frames(self, buf, pos, active):
+        """Device-side per-slot frame gather + idle masking."""
         idx = jnp.clip(pos, 0, self.max_frames - 1)
         x = jnp.take_along_axis(buf, idx[:, None, None], axis=1)[:, 0]
-        x = jnp.where(active[:, None], x, jnp.zeros_like(x))  # idle -> 0
+        return jnp.where(active[:, None], x, jnp.zeros_like(x))  # idle -> 0
+
+    def _device_step(self, state, buf, pos, active):
+        """(state, buffer, per-slot cursor, mask) -> (state, logits, aux)."""
+        x = self._gather_frames(buf, pos, active)
         return self.engine._masked_frame_step(state, x, active)
+
+    def _device_ring_step(self, state, buf, ctrl, ring, aux_acc):
+        """Pipelined variant: logits into the sharded ring, counters into
+        the device accumulator -> (state, ring, aux_acc).  ``ctrl`` is the
+        packed (3, slots) int32 control word — frame cursor, active mask,
+        ring write index — one small sharded transfer per step."""
+        pos, active, ring_idx = ctrl[0], ctrl[1].astype(bool), ctrl[2]
+        x = self._gather_frames(buf, pos, active)
+        return self.engine._ring_frame_step(state, x, active, ring, ring_idx,
+                                            aux_acc)
+
+    def _device_ring_step_quiet(self, state, buf, ctrl, ring):
+        pos, active, ring_idx = ctrl[0], ctrl[1].astype(bool), ctrl[2]
+        x = self._gather_frames(buf, pos, active)
+        return self.engine._ring_frame_step_quiet(state, x, ring, ring_idx)
 
     def _on_slot_filled(self, i: int, req: StreamRequest) -> None:
         """Pin the slot's quantized frames into its device buffer row.
 
         Only ``len(frames)`` rows transfer; stale rows past the utterance
         end are never read (an active slot's cursor stays < its length and
-        idle slots are masked in ``_device_step``)."""
+        idle slots are masked in the device step)."""
+        super()._on_slot_filled(i, req)
         self._buf = self._buf.at[i, : len(req.frames)].set(
             jnp.asarray(req.frames, jnp.float32))
 
@@ -146,3 +200,15 @@ class ShardedStreamLoop(StreamLoop):
         self.state, logits, aux_vec = self._jit_step(
             self.state, self._buf, pos, act)
         return np.asarray(logits), aux_vec
+
+    def _dispatch_ring_step(self, ctrl: np.ndarray) -> None:
+        word = np.empty((3, self.slots), np.int32)
+        word[0] = self.slot_pos
+        word[1:] = ctrl  # [active mask; ring idx] from the base loop
+        word_d = jax.device_put(word, self._ctrl)
+        if self.counters is None:
+            self.state, self._ring = self._jit_ring_quiet(
+                self.state, self._buf, word_d, self._ring)
+        else:
+            self.state, self._ring, self._aux_acc = self._jit_ring_step(
+                self.state, self._buf, word_d, self._ring, self._aux_acc)

@@ -1,0 +1,78 @@
+"""Slot-based continuous-batching bookkeeping shared by the serving loops.
+
+Both serving front-ends pack a queue of variable-length requests into a
+fixed batch of ``batch_slots`` rows and refill a finished slot from the
+queue without stopping the batch:
+
+  * ``serving/engine.py``'s ``ServeLoop`` — token-LM requests over KV-cache
+    rows;
+  * ``serving/stream.py``'s ``StreamLoop`` (and its sharded subclass) —
+    audio streams over recurrent-state rows.
+
+``SlotScheduler`` owns exactly the part they share: the submit queue, the
+slot -> request table with per-slot progress cursors, refill, and the
+finished list.  What a "step" means (one decode token, one audio frame)
+and where the batch lives (host arrays, a sharded device buffer) stay with
+the subclasses, which hook ``_on_slot_filled`` for data placement.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import numpy as np
+
+
+class SlotScheduler:
+    """Queue/slot/finished bookkeeping for continuous batching.
+
+    Requests are any objects with a ``done`` attribute; they enter via
+    ``_enqueue``, occupy a slot from ``_refill`` until ``_finish_slot``,
+    and end in ``finished`` in completion order.
+    """
+
+    def __init__(self, batch_slots: int):
+        if batch_slots < 1:
+            raise ValueError(f"batch_slots must be >= 1, got {batch_slots}")
+        self.slots = batch_slots
+        self.queue: list[Any] = []
+        self.finished: list[Any] = []
+        self.slot_req: list[Any | None] = [None] * batch_slots
+        self.slot_pos = [0] * batch_slots
+        self._next_sid = 0
+
+    def _new_sid(self) -> int:
+        sid = self._next_sid
+        self._next_sid += 1
+        return sid
+
+    def _refill(self) -> None:
+        """Fill every empty slot from the queue (FIFO), resetting its cursor
+        and giving the subclass a chance to place the request's data."""
+        for i in range(self.slots):
+            if self.slot_req[i] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slot_req[i] = req
+                self.slot_pos[i] = 0
+                self._on_slot_filled(i, req)
+
+    def _on_slot_filled(self, i: int, req: Any) -> None:
+        """Hook: a request was just placed into slot ``i`` (e.g. reset the
+        slot's recurrent state, pin its frames on device)."""
+
+    def _finish_slot(self, i: int) -> Any:
+        """Mark slot ``i``'s request done, move it to ``finished``, and free
+        the slot for refill."""
+        req = self.slot_req[i]
+        req.done = True
+        self.finished.append(req)
+        self.slot_req[i] = None
+        return req
+
+    def active_mask(self) -> np.ndarray:
+        """(slots,) bool: which slots currently hold a request."""
+        return np.array([r is not None for r in self.slot_req], bool)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(r is not None for r in self.slot_req)

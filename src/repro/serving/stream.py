@@ -3,10 +3,10 @@
 This is the serving path for the paper's actual workload: always-on speech
 recognition over 10-ms audio frames from a pruned/int4 0.1 MB model — the
 recurrent-state analogue of the token-LM continuous batching in
-``serving/engine.py``.
+``serving/engine.py`` (both loops run on ``serving.slots.SlotScheduler``).
 
-Lifecycle
----------
+Lifecycle (contract v2 — pipelined)
+-----------------------------------
 1. **Frames.** Audio arrives as per-utterance feature sequences
    ``(T, input_dim)``.  Features are quantized to the 8-bit fixed-point
    input format with a *static* calibrated scale (hardware has no per-chunk
@@ -19,7 +19,28 @@ Lifecycle
 3. **State.** ``CompiledRSNN`` carries ``RSNNState`` (per-ts spikes + LIF
    membrane chain) across frames; parity with ``core.rsnn.forward`` over the
    concatenated utterance is the engine's correctness contract
-   (tests/test_stream.py).
+   (tests/test_stream.py, tests/test_stream_pipeline.py).
+4. **Pipelining (v2).** ``step_once`` *dispatches* device step ``t`` and
+   returns without a device->host transfer: per-slot logits are written into
+   a device-side ring (``(slots, ring_frames, fc_dim)``) inside the jitted
+   step, and the packed sparsity-counter vector is accumulated into a
+   device-side running sum.  Up to ``pipeline_depth`` steps stay in flight;
+   the host only blocks on step ``t - pipeline_depth + 1`` (a fence, not a
+   transfer), so the host-side frame assembly/scheduling of step ``t+1``
+   overlaps device execution of step ``t`` — the serving analogue of the
+   paper's parallel time-step datapath and EdgeDRNN's continuous DMA-fed
+   pipeline.  A stream's logits cross to the host **once per stream** (on
+   completion, or on a ring-watermark flush for streams longer than
+   ``ring_frames``), and the counter accumulator crosses **once per
+   drain** (``flush()`` / metrics read), not once per frame.
+   ``pipeline_depth=0`` preserves the v1 synchronous contract — one logit
+   fetch and one counter fetch per step — and is the bit-parity comparator.
+
+Scheduling (which frame each step serves, refill/reset order) is identical
+in both contracts: completion is decided by host-side frame counts, never
+by logit values, so the pipelined loop can advance its bookkeeping at
+dispatch time.  Logits are bit-identical between v1 and v2 on float and
+int4 paths (tests/test_stream_pipeline.py).
 
 Execution paths (``EngineConfig``): ``backend`` names a registered entry in
 ``serving/backends.py`` — ``ref``/``jnp`` (oracles), ``pallas`` (fused
@@ -31,24 +52,29 @@ kernels), ``sparse`` (pallas + the fused zero-skip CSC FC of
 the zero-skipping CSC path of the chosen backend.  New kernels plug in by
 registering a backend; the engine itself never selects kernels.
 
-Scaling out: ``serving/sharded.py`` runs this same engine with the slot
-batch, recurrent state, and pinned frame buffer sharded over a device mesh
-(weights replicated via ``place_weights``), and ``data/featurize.py``
-prefetches quantized frames ahead of the slot loop.
+Scaling out: ``serving/sharded.py`` runs this same loop with the slot
+batch, recurrent state, pinned frame buffer, and logit ring sharded over a
+device mesh (weights replicated via ``place_weights``), and
+``data/featurize.py`` prefetches quantized frames ahead of the slot loop
+(``AsyncFeaturizer.for_loop`` sizes its queue to ``batch_slots +
+pipeline_depth`` so refills never wait on featurization).
 
 Sparsity counters -> MMAC/s
 ---------------------------
 Each step emits per-slot spike/bit counters (L0/L1 per-ts spike counts, the
-merged-spike union count, input one-bits).  ``StreamLoop`` accumulates them
-over *active* slots only into ``core.complexity.SparsityCounters``, whose
-``profile()`` is the measured ``SparsityProfile`` and whose
-``mmac_per_second()`` evaluates the paper's zero-skip complexity table
-(Fig. 13 / the 13.86 MMAC/s operating point) on live traffic instead of the
-published Fig. 18 constants.
+merged-spike union count, input one-bits), masked to *active* slots and
+reduced on device.  In the pipelined contract they accumulate on device and
+fold into ``core.complexity.SparsityCounters`` on drain; ``profile()`` is
+the measured ``SparsityProfile`` and ``mmac_per_second()`` evaluates the
+paper's zero-skip complexity table (Fig. 13 / the 13.86 MMAC/s operating
+point) on live traffic instead of the published Fig. 18 constants.  Pass
+``track_sparsity=False`` to detach the sink: the loop then dispatches a
+counter-free step (no per-step counter math, no fetch, ever).
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 
 import jax
@@ -63,6 +89,7 @@ from repro.core.compression.compress import (CompressionConfig,
 from repro.core.lif import LIFState
 from repro.core.rsnn import RSNNConfig, RSNNState
 from repro.serving import backends
+from repro.serving.slots import SlotScheduler
 
 
 @dataclasses.dataclass(frozen=True)
@@ -176,6 +203,8 @@ class CompiledRSNN:
     def _compile(self) -> None:
         self._step = jax.jit(self._frame_step)
         self._step_masked = jax.jit(self._masked_frame_step)
+        self._step_ring = jax.jit(self._ring_frame_step_fused)
+        self._step_ring_quiet = jax.jit(self._ring_frame_step_fused_quiet)
         self._run = jax.jit(self._run_scan)
 
     def place_weights(self, sharding) -> None:
@@ -267,6 +296,51 @@ class CompiledRSNN:
         state, logits, aux = self._frame_step(state, x_t)
         return state, logits, pack_step_aux(aux, active)
 
+    def _ring_write(self, ring: jax.Array, ring_idx: jax.Array,
+                    logits: jax.Array) -> jax.Array:
+        """Scatter each slot's logits row into its ring position."""
+        return ring.at[jnp.arange(logits.shape[0]), ring_idx].set(logits)
+
+    def _quantize_in_graph(self, x: jax.Array) -> jax.Array:
+        """Traced input quantization for the fused pipelined step — the
+        same elementwise round/clip as ``quantize_features`` (bit-exact
+        under jit), minus the eager integer-contract check: with
+        ``input_scale=None`` the caller validates at submit time instead,
+        so the step dispatch stays transfer-free."""
+        if self._input_scale is None:
+            return x
+        return spike_ops.quantize_input(x, self.cfg.input_bits,
+                                        self._input_scale)[0]
+
+    def _ring_frame_step(self, state: RSNNState, x_t: jax.Array,
+                         active: jax.Array, ring: jax.Array,
+                         ring_idx: jax.Array, aux_acc: jax.Array):
+        state, logits, aux = self._frame_step(state, x_t)
+        return (state, self._ring_write(ring, ring_idx, logits),
+                aux_acc + pack_step_aux(aux, active))
+
+    def _ring_frame_step_quiet(self, state: RSNNState, x_t: jax.Array,
+                               ring: jax.Array, ring_idx: jax.Array):
+        state, logits, _ = self._frame_step(state, x_t)
+        return state, self._ring_write(ring, ring_idx, logits)
+
+    def _ring_frame_step_fused(self, state: RSNNState, x_raw: jax.Array,
+                               ctrl: jax.Array, ring: jax.Array,
+                               aux_acc: jax.Array):
+        """Raw-frame variant: quantization fused into the same dispatch (one
+        jit call per step instead of an eager quantize + a jitted step).
+        ``ctrl`` is the packed (2, slots) int32 control word — row 0 the
+        active mask, row 1 the ring write index — so the host ships one
+        small transfer per step instead of one per operand."""
+        return self._ring_frame_step(state, self._quantize_in_graph(x_raw),
+                                     ctrl[0], ring, ctrl[1], aux_acc)
+
+    def _ring_frame_step_fused_quiet(self, state: RSNNState,
+                                     x_raw: jax.Array, ctrl: jax.Array,
+                                     ring: jax.Array):
+        return self._ring_frame_step_quiet(
+            state, self._quantize_in_graph(x_raw), ring, ctrl[1])
+
     # ------------------------------------------------------------ execution
 
     def step(self, state: RSNNState, x_q: jax.Array):
@@ -281,6 +355,23 @@ class CompiledRSNN:
         transfer per step instead of one per counter key (see
         ``pack_step_aux``/``unpack_step_aux``)."""
         return self._step_masked(state, x_q, active)
+
+    def step_ring(self, state: RSNNState, x_raw: jax.Array,
+                  ctrl: jax.Array, ring: jax.Array, aux_acc: jax.Array):
+        """Contract-v2 pipelined step over *raw* frames: input quantization,
+        the frame step, the logit write into ``ring`` at the per-slot ring
+        row ``ctrl[1]``, and the ``ctrl[0]``-masked packed-counter add into
+        ``aux_acc`` all run inside one jitted dispatch — the call returns
+        device arrays only, so the host never blocks here.  Returns
+        (state, ring, aux_acc)."""
+        return self._step_ring(state, x_raw, ctrl, ring, aux_acc)
+
+    def step_ring_quiet(self, state: RSNNState, x_raw: jax.Array,
+                        ctrl: jax.Array, ring: jax.Array):
+        """``step_ring`` without sparsity counters (no counter math at all:
+        XLA dead-code-eliminates the unused aux reductions).  Returns
+        (state, ring)."""
+        return self._step_ring_quiet(state, x_raw, ctrl, ring)
 
     def _run_scan(self, state: RSNNState, xq: jax.Array):
         def body(st, x_t):
@@ -318,7 +409,8 @@ def pack_step_aux(aux: dict, active: jax.Array) -> jax.Array:
     """Mask the per-slot counters of one step by ``active`` and reduce over
     slots, packed into one flat device vector: ``[spikes_l0 (TS,),
     spikes_l1 (TS,), union_l1, input_one_bits]``.  The slot loops fetch this
-    single vector per step instead of one host round-trip per counter key.
+    single vector per step (v1) or accumulate it on device and fetch once
+    per drain (v2) instead of one host round-trip per counter key.
     """
     act = active.astype(jnp.float32)
     return jnp.concatenate([
@@ -331,7 +423,9 @@ def pack_step_aux(aux: dict, active: jax.Array) -> jax.Array:
 
 def unpack_step_aux(vec, num_ts: int) -> dict:
     """Host-side inverse of ``pack_step_aux`` -> the dict
-    ``complexity.SparsityCounters.update`` consumes."""
+    ``complexity.SparsityCounters.update`` consumes.  The packed layout is
+    linear in frames, so a device-side sum of per-step vectors unpacks the
+    same way as a single step's vector."""
     v = np.asarray(vec)
     return {"spikes_l0": v[:num_ts], "spikes_l1": v[num_ts:2 * num_ts],
             "union_l1": v[2 * num_ts], "input_one_bits": v[2 * num_ts + 1]}
@@ -344,21 +438,49 @@ def unpack_step_aux(vec, num_ts: int) -> dict:
 
 @dataclasses.dataclass
 class StreamRequest:
-    """One utterance: its frames in, its per-frame logits out."""
+    """One utterance: its frames in, its per-frame logits out.
+
+    In the pipelined contract, harvested logit blocks arrive as device
+    arrays in ``pending`` (one block per stream completion or watermark
+    flush) and materialize into ``logits`` rows when the pipeline retires
+    the completing step — or lazily, on the first ``stacked_logits`` call.
+    """
 
     sid: int
     frames: np.ndarray  # (T, input_dim) raw features
     fc_dim: int = 0  # logit width, stamped by StreamLoop.submit
     logits: list = dataclasses.field(default_factory=list)
     done: bool = False
+    pending: list = dataclasses.field(default_factory=list, repr=False)
+
+    def _materialize(self) -> int:
+        """Fetch pending device-side logit blocks into ``logits`` rows;
+        returns the number of device->host transfers performed."""
+        n = len(self.pending)
+        for chunk in self.pending:
+            self.logits.extend(np.asarray(chunk))
+        self.pending.clear()
+        return n
 
     def stacked_logits(self) -> np.ndarray:
+        self._materialize()
         if not self.logits:
             return np.zeros((0, self.fc_dim), np.float32)
         return np.stack(self.logits)
 
 
-class StreamLoop:
+class _InflightStep:
+    """One dispatched-but-unretired device step: a fence handle plus the
+    requests whose completion rode on this step."""
+
+    __slots__ = ("handle", "completed")
+
+    def __init__(self, handle, completed):
+        self.handle = handle  # device array produced by the step (fence)
+        self.completed = completed  # list[StreamRequest]
+
+
+class StreamLoop(SlotScheduler):
     """Continuous batching of audio streams over recurrent-state slots.
 
     N submitted utterances share a fixed decode batch of ``batch_slots``
@@ -366,18 +488,51 @@ class StreamLoop:
     slot whose utterance ends is state-reset and refilled from the queue
     mid-batch, so throughput never drops to the shortest stream.  Idle slots
     carry zero frames and are excluded from the sparsity counters.
+
+    ``pipeline_depth`` selects the step-lifecycle contract (module
+    docstring): ``0`` is the v1 synchronous loop (one logit + one counter
+    fetch per step); ``>= 1`` is the v2 pipelined loop with at most
+    ``pipeline_depth`` device steps in flight, logits retained in a
+    device-side ring of ``ring_frames`` rows per slot, and counters
+    accumulated on device.  Scheduling and logits are identical across
+    contracts; only *when data crosses to the host* changes.
+
+    ``host_syncs`` counts device->host transfers the loop performs — the
+    quantity the pipelined contract minimizes (``bench_stream_pipeline``
+    reports it per frame).  ``track_sparsity=False`` detaches the
+    sparsity-counter sink entirely: no counter math, no counter fetches.
     """
 
-    def __init__(self, engine: CompiledRSNN, batch_slots: int = 4):
+    def __init__(self, engine: CompiledRSNN, batch_slots: int = 4,
+                 pipeline_depth: int = 2, ring_frames: int = 256,
+                 track_sparsity: bool = True):
+        super().__init__(batch_slots)
+        if pipeline_depth < 0:
+            raise ValueError(f"pipeline_depth must be >= 0, "
+                             f"got {pipeline_depth}")
+        if ring_frames < 1:
+            raise ValueError(f"ring_frames must be >= 1, got {ring_frames}")
         self.engine = engine
-        self.slots = batch_slots
-        self.queue: list[StreamRequest] = []
-        self.finished: list[StreamRequest] = []
+        self.pipeline_depth = pipeline_depth
+        self.ring_frames = ring_frames
+        self.track_sparsity = track_sparsity
         self.state = engine.init_state(batch_slots)
-        self.slot_req: list[StreamRequest | None] = [None] * batch_slots
-        self.slot_pos = [0] * batch_slots
-        self._next_sid = 0
+        self._flushed = [0] * batch_slots  # frames already harvested, per slot
+        self._inflight: collections.deque[_InflightStep] = collections.deque()
+        self._ring = self._init_ring() if pipeline_depth >= 1 else None
         self.reset_metrics()
+
+    def _init_ring(self):
+        """Device-side per-slot logit ring (overridden to shard on a mesh)."""
+        return jnp.zeros(
+            (self.slots, self.ring_frames, self.engine.cfg.fc_dim),
+            jnp.float32)
+
+    def _zero_aux_acc(self):
+        """Zeroed packed-counter accumulator (overridden to place on mesh)."""
+        return jnp.zeros((2 * self.engine.cfg.num_ts + 2,), jnp.float32)
+
+    # ------------------------------------------------------------- frontend
 
     def submit(self, frames: np.ndarray) -> int:
         return self._enqueue(self._validate_frames(frames))
@@ -390,11 +545,18 @@ class StreamLoop:
             raise ValueError(
                 f"frames must have shape (T, input_dim={d}); "
                 f"got {frames.shape}")
+        if (self.pipeline_depth >= 1 and self.engine._input_scale is None
+                and frames.size and np.any(frames != np.round(frames))):
+            # the pipelined step fuses quantization into the jitted dispatch
+            # and cannot run the eager integer-contract check per step —
+            # enforce it here, once per utterance
+            raise ValueError(
+                "input_scale=None requires integer-valued features; "
+                "pass input_scale=calibrate_input_scale(features)")
         return frames
 
     def _enqueue(self, frames: np.ndarray) -> int:
-        sid = self._next_sid
-        self._next_sid += 1
+        sid = self._new_sid()
         req = StreamRequest(sid, frames, fc_dim=self.engine.cfg.fc_dim)
         if len(req.frames) == 0:  # empty utterance: nothing to stream
             req.done = True
@@ -403,58 +565,155 @@ class StreamLoop:
             self.queue.append(req)
         return sid
 
-    def _refill(self) -> None:
-        for i in range(self.slots):
-            if self.slot_req[i] is None and self.queue:
-                req = self.queue.pop(0)
-                self.slot_req[i] = req
-                self.slot_pos[i] = 0
-                self.state = reset_slot(self.state, i)
-                self._on_slot_filled(i, req)
-
     def _on_slot_filled(self, i: int, req: StreamRequest) -> None:
-        """Hook for subclasses (e.g. pinning the slot's frames on device)."""
+        """Fresh utterance boundary: zero the slot's recurrent state and
+        harvest cursor.  (The previous occupant's un-materialized logit
+        blocks, if any, were already sliced out of the ring at its
+        completion — ring rows are dead once harvested, so the new stream
+        may overwrite them while those blocks are still in flight.)"""
+        self._flushed[i] = 0
+        self.state = reset_slot(self.state, i)
 
-    def _dispatch_step(self, active: np.ndarray):
-        """Advance the engine one frame over all slots.  Returns
-        (logits (slots, fc_dim) np, packed masked counter vector)."""
+    # ------------------------------------------------------------ step path
+
+    def _gather_host_frames(self) -> np.ndarray:
+        """Host-side frame assembly: idle slots carry zero frames (the
+        counter masking keys off the active mask, not this zeroing)."""
         d = self.engine.cfg.input_dim
         x = np.zeros((self.slots, d), np.float32)
         for i, r in enumerate(self.slot_req):
             if r is not None:
                 x[i] = r.frames[self.slot_pos[i]]
+        return x
+
+    def _dispatch_step(self, active: np.ndarray):
+        """v1 path: advance the engine one frame over all slots.  Returns
+        (logits (slots, fc_dim) np, packed masked counter vector)."""
+        x = self._gather_host_frames()
         xq = self.engine.quantize_features(jnp.asarray(x))
         self.state, logits, aux_vec = self.engine.step_masked(
             self.state, xq, jnp.asarray(active))
         return np.asarray(logits), aux_vec
 
+    def _dispatch_ring_step(self, ctrl: np.ndarray) -> None:
+        """v2 path: dispatch one pipelined step (no host transfer; input
+        quantization is fused into the jitted step, all scalar operands
+        ride the packed ``ctrl`` word)."""
+        x = jnp.asarray(self._gather_host_frames())
+        if self.counters is None:
+            self.state, self._ring = self.engine.step_ring_quiet(
+                self.state, x, jnp.asarray(ctrl), self._ring)
+        else:
+            self.state, self._ring, self._aux_acc = self.engine.step_ring(
+                self.state, x, jnp.asarray(ctrl), self._ring, self._aux_acc)
+
     def step_once(self) -> bool:
-        """One engine step over all slots; returns False when fully drained."""
+        """One engine step over all slots; returns False when fully drained
+        (empty queue, empty slots, and — in the pipelined contract — an
+        empty in-flight pipeline)."""
         self._refill()
-        active = np.array([r is not None for r in self.slot_req], bool)
+        active = self.active_mask()
         if not active.any():
+            if self._inflight:  # shutdown drain: retire without dispatching
+                self._retire()
+                return True
             return False
-        logits_np, aux_vec = self._dispatch_step(active)
+        if self.pipeline_depth == 0:
+            return self._step_once_sync(active)
+
+        ctrl = np.zeros((2, self.slots), np.int32)  # [active mask; ring idx]
+        ctrl[0] = active
+        ctrl[1] = [self.slot_pos[i] - self._flushed[i]
+                   if self.slot_req[i] is not None else 0
+                   for i in range(self.slots)]
+        self._dispatch_ring_step(ctrl)
         self.steps += 1
-        self.counters.update(
-            unpack_step_aux(aux_vec, self.engine.cfg.num_ts),
-            active_frames=float(active.sum()))
+        if self.counters is not None:
+            self._frames_acc += float(active.sum())
+        completed = self._advance_slots()
+        self._inflight.append(_InflightStep(self._ring, completed))
+        while len(self._inflight) > max(self.pipeline_depth - 1, 0):
+            self._retire()
+        return True
+
+    def _advance_slots(self) -> list[StreamRequest]:
+        """Dispatch-time bookkeeping: advance cursors, harvest completed or
+        watermark-full slots (a lazy device slice of the ring — the fetch
+        happens at retire time), reset + free finished slots.  Completion
+        depends only on host-side frame counts, so this is safe to run
+        while the step is still in flight — the schedule is identical to
+        the synchronous contract's."""
+        completed = []
+        for i, r in enumerate(self.slot_req):
+            if r is None:
+                continue
+            self.slot_pos[i] += 1
+            fill = self.slot_pos[i] - self._flushed[i]
+            if self.slot_pos[i] == len(r.frames):  # stream complete
+                if fill > 0:
+                    r.pending.append(self._ring[i, :fill])
+                completed.append(r)
+                self._finish_slot(i)
+                self._flushed[i] = 0
+                self.state = reset_slot(self.state, i)
+            elif fill == self.ring_frames:  # watermark flush: ring is full
+                r.pending.append(self._ring[i, :fill])
+                self._flushed[i] = self.slot_pos[i]
+        return completed
+
+    def _retire(self) -> None:
+        """Retire the oldest in-flight step: fence on its completion, then
+        materialize the logit blocks of streams it completed."""
+        step = self._inflight.popleft()
+        if step.handle is not None:
+            jax.block_until_ready(step.handle)  # fence, not a transfer
+        for r in step.completed:
+            self.host_syncs += r._materialize()
+
+    def _step_once_sync(self, active: np.ndarray) -> bool:
+        """v1 synchronous contract: fetch logits (and counters, when a sink
+        is attached) to the host every step."""
+        logits_np, aux_vec = self._dispatch_step(active)
+        self.host_syncs += 1  # per-frame logit fetch
+        self.steps += 1
+        if self.counters is not None:
+            # the packed-vector fetch is gated on an attached sink
+            self.counters.update(
+                unpack_step_aux(aux_vec, self.engine.cfg.num_ts),
+                active_frames=float(active.sum()))
+            self.host_syncs += 1
         for i, r in enumerate(self.slot_req):
             if r is None:
                 continue
             r.logits.append(logits_np[i])
             self.slot_pos[i] += 1
             if self.slot_pos[i] == len(r.frames):
-                r.done = True
-                self.finished.append(r)
-                self.slot_req[i] = None
+                self._finish_slot(i)
                 self.state = reset_slot(self.state, i)
         return True
 
+    @property
+    def pending_steps(self) -> int:
+        """Device steps dispatched but not yet retired."""
+        return len(self._inflight)
+
+    def flush(self) -> None:
+        """Drain the pipeline deterministically: retire every in-flight step
+        (materializing completed streams' logits) and fold the device-side
+        counter accumulator into ``counters``.  After ``flush()``,
+        ``pending_steps == 0`` and the metrics cover every dispatched step.
+        In-progress streams keep their un-watermarked logits on device —
+        those cross on completion, per the contract."""
+        while self._inflight:
+            self._retire()
+        self._drain_aux()
+
     def run(self) -> list[StreamRequest]:
-        """Drain queue and slots; returns finished requests in sid order."""
+        """Drain queue, slots, and pipeline; returns finished requests in
+        sid order, logits materialized."""
         while self.step_once():
             pass
+        self.flush()
         return sorted(self.finished, key=lambda r: r.sid)
 
     # --------------------------------------------------- measured complexity
@@ -462,21 +721,49 @@ class StreamLoop:
     def reset_metrics(self) -> None:
         """Zero the measured-traffic counters (e.g. after a warmup run)."""
         cfg = self.engine.cfg
-        self.counters = complexity.SparsityCounters(
+        self.counters = (complexity.SparsityCounters(
             num_ts=cfg.num_ts, hidden_dim=cfg.hidden_dim,
             input_dim=cfg.input_dim, input_bits=cfg.input_bits)
+            if self.track_sparsity else None)
+        self._aux_acc = (self._zero_aux_acc()
+                         if self.track_sparsity and self.pipeline_depth >= 1
+                         else None)
+        self._frames_acc = 0.0
         self.steps = 0
+        self.host_syncs = 0
+
+    def _drain_aux(self) -> None:
+        """Fold the device-side counter accumulator into ``counters`` (one
+        host transfer for all steps since the last drain)."""
+        if self.counters is None or self._frames_acc == 0.0:
+            return
+        self.counters.update(
+            unpack_step_aux(self._aux_acc, self.engine.cfg.num_ts),
+            active_frames=self._frames_acc)
+        self.host_syncs += 1
+        self._frames_acc = 0.0
+        self._aux_acc = self._zero_aux_acc()
+
+    def _require_counters(self) -> complexity.SparsityCounters:
+        if self.counters is None:
+            raise ValueError(
+                "sparsity tracking is disabled (track_sparsity=False); "
+                "construct the loop with track_sparsity=True to measure "
+                "profiles/MMAC/s")
+        self._drain_aux()
+        return self.counters
 
     def sparsity_profile(self) -> complexity.SparsityProfile:
-        return self.counters.profile()
+        return self._require_counters().profile()
 
     def mmac_per_second(self, fc_prune_frac: float | None = None) -> float:
         """Zero-skip MMAC/s of the traffic served so far (paper Fig. 13).
 
         Defaults to the pruning fraction of the model the engine actually
         serves."""
+        counters = self._require_counters()
         if fc_prune_frac is None:
             fc_prune_frac = self.engine.fc_prune_frac
-        return self.counters.mmac_per_second(
+        return counters.mmac_per_second(
             self.engine.cfg, merged_spike=self.engine.cfg.merged_spike,
             fc_prune_frac=fc_prune_frac)

@@ -153,22 +153,28 @@ _EIGHT_DEVICE_PARITY = """
             for t in [5, 9, 3, 7, 6, 12, 4, 8, 10, 6]]
     scale = S.calibrate_input_scale(jnp.asarray(np.concatenate(utts, 0)))
 
+    # synchronous v1 single-device baseline vs the pipelined sharded loop:
+    # covers contract parity and mesh parity in one comparison
     eng1 = S.CompiledRSNN(cfg, params, S.EngineConfig(input_scale=scale))
-    loop1 = S.StreamLoop(eng1, batch_slots=8)
+    loop1 = S.StreamLoop(eng1, batch_slots=8, pipeline_depth=0)
     for u in utts:
         loop1.submit(u)
     done1 = loop1.run()
 
     eng2 = S.CompiledRSNN(cfg, params, S.EngineConfig(input_scale=scale))
-    loop2 = ShardedStreamLoop(eng2, batch_slots=8, max_frames=16)
+    loop2 = ShardedStreamLoop(eng2, batch_slots=8, max_frames=16,
+                              pipeline_depth=2)
     assert loop2.mesh.shape["data"] == 8
     for u in utts:
         loop2.submit(u)
     done2 = loop2.run()
 
-    # the slot state really lives sharded across the mesh
+    # the slot state and the on-device logit ring really live sharded
     spec = loop2.state.h0.sharding.spec
     assert "data" in str(spec), spec
+    ring_spec = loop2._ring.sharding.spec
+    assert "data" in str(ring_spec), ring_spec
+    assert loop2.host_syncs < loop1.host_syncs
     for a, b in zip(done1, done2):
         assert a.sid == b.sid
         np.testing.assert_array_equal(a.stacked_logits(), b.stacked_logits())

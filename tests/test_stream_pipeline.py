@@ -1,0 +1,309 @@
+"""Pipelined (contract-v2) streaming: bit-parity with the synchronous v1
+loop on float and int4 paths, pipeline edge cases (completion in flight,
+refill over un-flushed logits, watermark ring wrap, flush determinism),
+counter-sink gating, and the host-sync accounting the pipelining exists to
+improve."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import rsnn
+from repro.core.compression.compress import CompressionConfig, init_compression
+from repro.data import featurize
+from repro.serving import stream as S
+from repro.serving.sharded import ShardedStreamLoop
+
+
+def _utterances(cfg, lens, seed=7):
+    rng = np.random.default_rng(seed)
+    return [rng.normal(size=(t, cfg.input_dim)).astype(np.float32)
+            for t in lens]
+
+
+@pytest.fixture
+def setup(small_cfg, rng_key):
+    params = rsnn.init_params(rng_key, small_cfg)
+    utts = _utterances(small_cfg, [5, 9, 3, 7, 6])
+    scale = S.calibrate_input_scale(jnp.asarray(np.concatenate(utts, 0)))
+    return small_cfg, params, utts, scale
+
+
+def _float_engine(cfg, params, scale):
+    return S.CompiledRSNN(cfg, params, S.EngineConfig(input_scale=scale))
+
+
+def _int4_engine(cfg, params, scale):
+    ccfg = CompressionConfig(fc_prune_frac=0.4, weight_bits=4)
+    return S.CompiledRSNN(
+        cfg, params, S.EngineConfig(precision="int4", input_scale=scale),
+        ccfg, init_compression(params, ccfg))
+
+
+def _serve(loop, utts):
+    for u in utts:
+        loop.submit(u)
+    return loop.run()
+
+
+def _assert_same_logits(done_a, done_b):
+    assert [r.sid for r in done_a] == [r.sid for r in done_b]
+    for a, b in zip(done_a, done_b):
+        np.testing.assert_array_equal(a.stacked_logits(), b.stacked_logits())
+
+
+# --------------------------------------------------------------- bit parity
+
+
+@pytest.mark.parametrize("make_engine", [_float_engine, _int4_engine],
+                         ids=["float", "int4"])
+def test_pipelined_matches_sync(setup, make_engine):
+    """Depth-2 pipelined StreamLoop == v1 synchronous loop, bit for bit,
+    with identical scheduling and (drained) counter totals."""
+    cfg, params, utts, scale = setup
+    sync = S.StreamLoop(make_engine(cfg, params, scale), batch_slots=2,
+                        pipeline_depth=0)
+    done_sync = _serve(sync, utts)
+    pipe = S.StreamLoop(make_engine(cfg, params, scale), batch_slots=2,
+                        pipeline_depth=2)
+    done_pipe = _serve(pipe, utts)
+    _assert_same_logits(done_sync, done_pipe)
+    assert pipe.steps == sync.steps
+    assert pipe.pending_steps == 0
+    assert pipe.counters.frames == sync.counters.frames
+    np.testing.assert_allclose(pipe.sparsity_profile().l0_density,
+                               sync.sparsity_profile().l0_density, rtol=1e-6)
+    assert pipe.mmac_per_second(0.4) == pytest.approx(
+        sync.mmac_per_second(0.4))
+
+
+@pytest.mark.parametrize("depth", [1, 3])
+def test_pipeline_depth_does_not_change_logits(setup, depth):
+    """The depth knob changes when data crosses to the host, never what is
+    computed: depths 1 and 3 match the synchronous loop bitwise."""
+    cfg, params, utts, scale = setup
+    eng = _float_engine(cfg, params, scale)
+    sync = S.StreamLoop(eng, batch_slots=2, pipeline_depth=0)
+    done_sync = _serve(sync, utts)
+    pipe = S.StreamLoop(eng, batch_slots=2, pipeline_depth=depth)
+    _assert_same_logits(done_sync, _serve(pipe, utts))
+
+
+def test_sharded_pipelined_matches_sync_loop(setup):
+    """Pipelined ShardedStreamLoop (1-device mesh) == synchronous
+    single-device StreamLoop (the 8-virtual-device variant runs in
+    tests/test_sharded_stream.py's subprocess)."""
+    cfg, params, utts, scale = setup
+    sync = S.StreamLoop(_float_engine(cfg, params, scale), batch_slots=2,
+                        pipeline_depth=0)
+    done_sync = _serve(sync, utts)
+    pipe = ShardedStreamLoop(_float_engine(cfg, params, scale),
+                             batch_slots=2, max_frames=16, pipeline_depth=2)
+    done_pipe = _serve(pipe, utts)
+    _assert_same_logits(done_sync, done_pipe)
+    assert pipe.steps == sync.steps
+    assert pipe.counters.frames == sync.counters.frames
+
+
+def test_sharded_pipelined_int4_matches_sync(setup):
+    cfg, params, utts, scale = setup
+    sync = S.StreamLoop(_int4_engine(cfg, params, scale), batch_slots=2,
+                        pipeline_depth=0)
+    done_sync = _serve(sync, utts)
+    pipe = ShardedStreamLoop(_int4_engine(cfg, params, scale),
+                             batch_slots=2, max_frames=16, pipeline_depth=2)
+    _assert_same_logits(done_sync, _serve(pipe, utts))
+
+
+# ------------------------------------------------------------- edge cases
+
+
+def test_stream_completes_while_step_in_flight(setup):
+    """A 2-frame stream completes while the depth-3 pipeline still holds
+    its final step in flight; its logits must materialize correctly when
+    that step retires."""
+    cfg, params, _, scale = setup
+    utts = _utterances(cfg, [2, 9, 8])
+    eng = _float_engine(cfg, params, scale)
+    sync = S.StreamLoop(eng, batch_slots=2, pipeline_depth=0)
+    done_sync = _serve(sync, utts)
+    pipe = S.StreamLoop(eng, batch_slots=2, pipeline_depth=3)
+    for u in utts:
+        pipe.submit(u)
+    # after two dispatches the short stream is complete but both of its
+    # steps are still in flight (depth 3 retires nothing yet)
+    assert pipe.step_once() and pipe.step_once()
+    assert pipe.pending_steps == 2
+    short = next(r for r in pipe.finished if r.sid == 0)
+    assert short.done and len(short.pending) == 1 and short.logits == []
+    done_pipe = pipe.run()
+    _assert_same_logits(done_sync, done_pipe)
+
+
+def test_refill_into_slot_with_unflushed_logits(setup):
+    """Back-to-back streams through one slot at depth 2: the refill
+    overwrites ring rows whose previous harvest is still un-materialized.
+    Harvested slices are immutable values, so both streams stay exact."""
+    cfg, params, _, scale = setup
+    utts = _utterances(cfg, [4, 6, 3])
+    eng = _float_engine(cfg, params, scale)
+    sync = S.StreamLoop(eng, batch_slots=1, pipeline_depth=0)
+    done_sync = _serve(sync, utts)
+    pipe = S.StreamLoop(eng, batch_slots=1, pipeline_depth=2)
+    done_pipe = _serve(pipe, utts)
+    _assert_same_logits(done_sync, done_pipe)
+
+
+def test_watermark_flush_ring_wrap(setup):
+    """A stream longer than ring_frames crosses in multiple watermark
+    blocks and still reproduces the solo run exactly."""
+    cfg, params, _, scale = setup
+    utts = _utterances(cfg, [11, 5])
+    eng = _float_engine(cfg, params, scale)
+    pipe = S.StreamLoop(eng, batch_slots=2, pipeline_depth=2, ring_frames=4)
+    done = _serve(pipe, utts)
+    for r in done:
+        solo, _, _ = eng.run(jnp.asarray(r.frames)[None])
+        np.testing.assert_array_equal(r.stacked_logits(),
+                                      np.asarray(solo[0]))
+    # 11 frames over a 4-row ring: 2 watermark blocks + the completion tail
+    long = next(r for r in done if len(r.frames) == 11)
+    assert len(long.logits) == 11
+
+
+def test_flush_drains_depth2_pipeline_deterministically(setup):
+    """flush() retires every in-flight step and folds the device counter
+    accumulator: metrics then cover exactly the dispatched steps, whether
+    flushed mid-serve or at the end."""
+    cfg, params, utts, scale = setup
+    eng = _float_engine(cfg, params, scale)
+    pipe = S.StreamLoop(eng, batch_slots=2, pipeline_depth=2)
+    for u in utts:
+        pipe.submit(u)
+    for _ in range(3):
+        pipe.step_once()
+    assert pipe.pending_steps == 1  # depth 2: one step stays in flight
+    pipe.flush()
+    assert pipe.pending_steps == 0
+    assert pipe.counters.frames == 6.0  # 3 steps x 2 active slots
+    pipe.flush()  # idempotent
+    assert pipe.counters.frames == 6.0
+    done = pipe.run()
+    assert pipe.counters.frames == float(sum(len(u) for u in utts))
+    assert [r.sid for r in done] == list(range(len(utts)))
+
+
+def test_empty_utterance_pipelined(setup):
+    """Zero-length submissions complete immediately in the pipelined loop
+    without touching the ring."""
+    cfg, params, _, scale = setup
+    utts = _utterances(cfg, [4, 5])
+    eng = _float_engine(cfg, params, scale)
+    pipe = S.StreamLoop(eng, batch_slots=2, pipeline_depth=2)
+    pipe.submit(utts[0])
+    empty_sid = pipe.submit(np.zeros((0, cfg.input_dim), np.float32))
+    pipe.submit(utts[1])
+    done = pipe.run()
+    assert [r.sid for r in done] == [0, empty_sid, 2]
+    assert done[1].logits == [] and done[1].done
+    assert done[1].stacked_logits().shape == (0, cfg.fc_dim)
+
+
+# ------------------------------------------------- counter gating / syncs
+
+
+def test_counter_fetch_gated_on_attached_sink(setup):
+    """track_sparsity=False: no counters object, no counter fetches — the
+    only host transfers are the per-stream logit harvests."""
+    cfg, params, utts, scale = setup
+    eng = _float_engine(cfg, params, scale)
+    quiet = S.StreamLoop(eng, batch_slots=2, pipeline_depth=2,
+                         track_sparsity=False)
+    done = _serve(quiet, utts)
+    assert quiet.counters is None
+    assert len(done) == len(utts)
+    # one harvest per stream (all fit inside the default ring)
+    assert quiet.host_syncs == len(utts)
+    with pytest.raises(ValueError, match="track_sparsity"):
+        quiet.sparsity_profile()
+    with pytest.raises(ValueError, match="track_sparsity"):
+        quiet.mmac_per_second()
+    # the sync contract gates its per-step counter fetch the same way
+    sync_quiet = S.StreamLoop(eng, batch_slots=2, pipeline_depth=0,
+                              track_sparsity=False)
+    _serve(sync_quiet, utts)
+    assert sync_quiet.host_syncs == sync_quiet.steps  # logit fetches only
+
+
+def test_pipelined_saves_host_syncs_per_frame(setup):
+    """The acceptance metric: on the same workload the pipelined contract
+    performs at least one fewer host sync per frame than the synchronous
+    loop (2/frame -> ~1/stream)."""
+    cfg, params, _, scale = setup
+    utts = _utterances(cfg, [20, 17, 23])
+    eng = _float_engine(cfg, params, scale)
+    sync = S.StreamLoop(eng, batch_slots=1, pipeline_depth=0)
+    done_sync = _serve(sync, utts)
+    frames = sum(len(u) for u in utts)
+    assert sync.steps == frames  # one slot: one frame per step
+    assert sync.host_syncs == 2 * frames  # logits + counters, every step
+    pipe = S.StreamLoop(eng, batch_slots=1, pipeline_depth=2)
+    done_pipe = _serve(pipe, utts)
+    _assert_same_logits(done_sync, done_pipe)
+    # one harvest per stream + one counter drain
+    assert pipe.host_syncs == len(utts) + 1
+    saved = sync.host_syncs / frames - pipe.host_syncs / frames
+    assert saved >= 1.0
+
+
+def test_sync_loop_still_counts_and_matches_profile(setup):
+    """v1 per-step counter updates and v2 deferred accumulation agree."""
+    cfg, params, utts, scale = setup
+    eng = _float_engine(cfg, params, scale)
+    sync = S.StreamLoop(eng, batch_slots=2, pipeline_depth=0)
+    _serve(sync, utts)
+    pipe = S.StreamLoop(eng, batch_slots=2, pipeline_depth=2)
+    _serve(pipe, utts)
+    a, b = sync.sparsity_profile(), pipe.sparsity_profile()
+    np.testing.assert_allclose(b.l0_density, a.l0_density, rtol=1e-6)
+    np.testing.assert_allclose(b.l1_density, a.l1_density, rtol=1e-6)
+    np.testing.assert_allclose(b.input_bit_density, a.input_bit_density,
+                               rtol=1e-6)
+
+
+# ------------------------------------------------- front-end coordination
+
+
+def test_prefetch_depth_covers_pipeline():
+    assert featurize.prefetch_depth(4, 2) == 6
+    assert featurize.prefetch_depth(1, 0) == 2
+    assert featurize.prefetch_depth(2, 3) == 5
+
+
+def test_async_featurizer_for_loop_feeds_pipelined_sharded(setup):
+    """AsyncFeaturizer.for_loop (auto depth/quantizer) through the
+    pipelined sharded loop == raw submissions."""
+    cfg, params, utts, scale = setup
+    eng1 = _float_engine(cfg, params, scale)
+    loop1 = ShardedStreamLoop(eng1, batch_slots=2, max_frames=16)
+    done1 = _serve(loop1, utts)
+
+    eng2 = _float_engine(cfg, params, scale)
+    loop2 = ShardedStreamLoop(eng2, batch_slots=2, max_frames=16)
+    feat = featurize.AsyncFeaturizer.for_loop(loop2, utts)
+    assert feat._q.maxsize == featurize.prefetch_depth(2, 2)
+    sids = loop2.submit_stream(feat, quantized=True)
+    done2 = loop2.run()
+    assert sids == [r.sid for r in done2]
+    _assert_same_logits(done1, done2)
+
+
+def test_slot_scheduler_shared_with_token_loop():
+    """The streaming loop and the token-LM ServeLoop run on the same
+    scheduler base (the slot-batching reuse this refactor is for)."""
+    from repro.serving.engine import ServeLoop
+    from repro.serving.slots import SlotScheduler
+    assert issubclass(S.StreamLoop, SlotScheduler)
+    assert issubclass(ServeLoop, SlotScheduler)
+    with pytest.raises(ValueError, match="batch_slots"):
+        SlotScheduler(0)

@@ -1,0 +1,77 @@
+"""Docs checker: internal markdown links and anchors must resolve.
+
+Scans README.md and docs/**/*.md for inline links ``[text](target)``:
+
+  * external links (http/https/mailto) are skipped;
+  * relative file targets must exist on disk (resolved from the linking
+    file's directory);
+  * ``#anchor`` fragments pointing into a markdown file must match one of
+    its headings (GitHub slug rules: lowercase, punctuation stripped,
+    spaces -> dashes).
+
+Exits non-zero listing every broken link.  The CI docs job pairs this
+with ``python -m doctest`` over the same files so fenced ``>>>`` snippets
+stay runnable.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+# inline links, with or without a "title"; <>-wrapped targets unwrapped
+LINK = re.compile(r"\[[^\]]*\]\(\s*<?([^)<>\s]+)>?(?:\s+\"[^\"]*\")?\s*\)")
+HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def doc_files() -> list[Path]:
+    files = [ROOT / "README.md"]
+    files += sorted((ROOT / "docs").rglob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style heading -> anchor slug."""
+    h = re.sub(r"`([^`]*)`", r"\1", heading.strip().lower())
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def anchors_of(md: Path) -> set[str]:
+    return {slugify(m.group(1)) for m in HEADING.finditer(md.read_text())}
+
+
+def check() -> list[str]:
+    errors = []
+    for md in doc_files():
+        rel = md.relative_to(ROOT)
+        for m in LINK.finditer(md.read_text()):
+            target = m.group(1)
+            if target.startswith(EXTERNAL):
+                continue
+            path_part, _, frag = target.partition("#")
+            dest = (md.parent / path_part).resolve() if path_part else md
+            if not dest.exists():
+                errors.append(f"{rel}: broken link -> {target}")
+                continue
+            if frag and dest.suffix == ".md":
+                if slugify(frag) not in anchors_of(dest):
+                    errors.append(f"{rel}: missing anchor -> {target}")
+    return errors
+
+
+def main() -> int:
+    errors = check()
+    files = doc_files()
+    for e in errors:
+        print(f"ERROR {e}")
+    print(f"checked {len(files)} files: "
+          f"{'FAIL' if errors else 'ok'} ({len(errors)} broken)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
