@@ -394,3 +394,55 @@ def table3_power():
             round(C.tops_per_watt(PRUNED, 2, sparsity=sp), 2)},
     ]
     return rows, {"paper": "71.2 uW / 35.5 mW / 63.5 nJ/frame / 28.41 TOPS/W"}
+
+
+def bench_artifact_roundtrip():
+    """Deployment-artifact round trip (core/artifact.py): wall time of
+    save+load at the paper's deployed shape, plus the on-disk footprint and
+    a logit bit-parity check of artifact-served vs in-process-packed
+    serving — the contract the compression pipeline hands to the engine."""
+    import tempfile
+    from pathlib import Path
+
+    from repro.core import artifact as artifact_lib
+    from repro.core import sparse as sparse_lib
+    from repro.core.compression.compress import (CompressionConfig,
+                                                 init_compression)
+    from repro.serving.stream import CompiledRSNN, EngineConfig
+
+    cfg = PRUNED
+    params = rsnn.init_params(jax.random.PRNGKey(0), cfg)
+    ccfg = CompressionConfig(fc_prune_frac=0.4, weight_bits=4)
+    cstate = init_compression(params, ccfg)
+    packed = sparse_lib.pack_model(params, cfg, ccfg, cstate)
+
+    with tempfile.TemporaryDirectory() as td:
+        path = Path(td) / "artifact"
+
+        def roundtrip():
+            artifact_lib.save_artifact(path, cfg=cfg, packed=packed,
+                                       ccfg=ccfg, input_scale=0.05,
+                                       backend="jnp")
+            return artifact_lib.load_artifact(path)
+
+        us = time_us(roundtrip, iters=5)
+        art = roundtrip()
+        disk_bytes = sum(f.stat().st_size for f in path.iterdir())
+
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 10, cfg.input_dim))
+        mem = CompiledRSNN(cfg, params,
+                           EngineConfig(precision="int4", input_scale=0.05),
+                           ccfg=ccfg, cstate=cstate)
+        served = CompiledRSNN.from_artifact(path)
+        lm, _, _ = mem.run(x)
+        la, _, _ = served.run(x)
+        bit_identical = bool((np.asarray(lm) == np.asarray(la)).all())
+
+    rep = art.size_report
+    return us, {
+        "bit_identical_vs_in_memory": bit_identical,
+        "disk_bytes": disk_bytes,
+        "broadcast_total_bytes": rep["broadcast_total_bytes"],
+        "paper_fig12_bytes": 100864,
+        "schema_version": art.manifest["schema_version"],
+    }

@@ -27,7 +27,8 @@ TIMED = (("bench_rsnn_forward", "bench_rsnn_forward"),
          ("bench_sparse_fc", "bench_sparse_fc"),
          ("bench_stream_engine", "bench_stream_engine"),
          ("bench_stream_sharded", "bench_stream_sharded"),
-         ("bench_stream_pipeline", "bench_stream_pipeline"))
+         ("bench_stream_pipeline", "bench_stream_pipeline"),
+         ("bench_artifact_roundtrip", "bench_artifact_roundtrip"))
 
 
 def _emit(name: str, us: float, derived) -> None:

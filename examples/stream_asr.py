@@ -2,13 +2,23 @@
 
   PYTHONPATH=src python examples/stream_asr.py [--precision int4] \
       [--backend jnp|ref|pallas|sparse] [--slots 4] [--streams 8] \
-      [--sharded] [--pipeline-depth 2]
+      [--sharded] [--pipeline-depth 2] \
+      [--artifact DIR | --save-artifact DIR] [--frames N]
 
 Builds the paper's model (optionally packed to the pruned/int4 deployment
 artifact via core/sparse.py), submits a queue of unequal-length synthetic
 utterances to the slot-based StreamLoop, and reports throughput, the
 measured sparsity profile, and the zero-skip MMAC/s the served traffic
 would cost on the accelerator (paper Fig. 13).
+
+``--artifact DIR`` serves straight from an on-disk deployment artifact
+(core/artifact.py — e.g. the output of
+``python -m repro.training.rsnn_pipeline --artifact DIR``): model config,
+precision, preferred backend, and the static input scale all come from the
+manifest, and the logits are bit-identical to serving the same model
+packed in-process.  ``--save-artifact DIR`` writes the in-process model
+out as such an artifact instead.  ``--frames N`` truncates every utterance
+to N frames (the CI smoke serves 3 frames from a pipeline-built artifact).
 
 ``--sharded`` serves the same queue through serving/sharded.py instead:
 the slot batch and recurrent state shard over every local device (set
@@ -50,12 +60,23 @@ from repro.serving.stream import (CompiledRSNN, EngineConfig, StreamLoop,
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--backend", default="jnp",
-                    choices=list(backends.available()))
-    ap.add_argument("--precision", default="int4", choices=["float", "int4"])
-    ap.add_argument("--hidden", type=int, default=128)  # paper's pruned width
+    ap.add_argument("--backend", default=None,
+                    choices=list(backends.available()),
+                    help="execution backend (default: jnp, or the "
+                         "artifact's preferred backend)")
+    ap.add_argument("--precision", default="int4", choices=["float", "int4"],
+                    help="ignored with --artifact (manifest decides)")
+    ap.add_argument("--hidden", type=int, default=128,
+                    help="paper's pruned width; ignored with --artifact")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--streams", type=int, default=8)
+    ap.add_argument("--frames", type=int, default=None,
+                    help="truncate every utterance to this many frames")
+    ap.add_argument("--artifact", default=None, metavar="DIR",
+                    help="serve from an on-disk deployment artifact "
+                         "(config/precision/scale from its manifest)")
+    ap.add_argument("--save-artifact", default=None, metavar="DIR",
+                    help="write the in-process model out as an artifact")
     ap.add_argument("--sharded", action="store_true",
                     help="shard the slot batch over all local devices with "
                          "an async featurization front-end")
@@ -63,20 +84,56 @@ def main():
                     help="in-flight device steps (0 = v1 synchronous loop)")
     args = ap.parse_args()
 
-    cfg = RSNNConfig(hidden_dim=args.hidden)
-    params = rsnn.init_params(jax.random.PRNGKey(0), cfg)
-    ccfg = CompressionConfig(fc_prune_frac=0.4, weight_bits=4)
-    cstate = init_compression(params, ccfg)
+    if args.artifact:
+        if args.save_artifact:
+            ap.error("--save-artifact conflicts with --artifact (the model "
+                     "already lives on disk)")
+        engine = CompiledRSNN.from_artifact(args.artifact,
+                                            backend=args.backend)
+        cfg = engine.cfg
+        scale = engine._input_scale
+        if scale is None:
+            raise SystemExit("artifact carries no input scale; re-export it "
+                             "with calibration")
+        print(f"serving from artifact {args.artifact} "
+              f"(precision {engine.engine.precision}, "
+              f"backend {engine.engine.backend})")
+    else:
+        cfg = RSNNConfig(hidden_dim=args.hidden)
+        params = rsnn.init_params(jax.random.PRNGKey(0), cfg)
+        ccfg = CompressionConfig(fc_prune_frac=0.4, weight_bits=4)
+        cstate = init_compression(params, ccfg)
 
     data = TimitLikeStream(SpeechDataConfig())
     rng = np.random.default_rng(0)
     utts = []
     for i in range(args.streams):
         feats = data.batch(1, step=i)["features"][0]
-        utts.append(feats[: int(rng.integers(40, 101))])  # 0.4-1.0 s
+        n = int(rng.integers(40, 101))  # 0.4-1.0 s
+        if args.frames is not None:
+            n = min(n, args.frames)
+        utts.append(feats[:n])
 
-    scale = calibrate_input_scale(np.concatenate(utts, axis=0),
-                                  cfg.input_bits)
+    if not args.artifact:
+        scale = calibrate_input_scale(np.concatenate(utts, axis=0),
+                                      cfg.input_bits)
+        engine = CompiledRSNN(
+            cfg, params,
+            EngineConfig(backend=args.backend or "jnp",
+                         precision=args.precision, input_scale=scale),
+            ccfg=ccfg, cstate=cstate)
+        if args.save_artifact:
+            from repro.core import artifact as artifact_lib
+            if engine.packed is not None:
+                artifact_lib.save_artifact(
+                    args.save_artifact, cfg=cfg, packed=engine.packed,
+                    ccfg=ccfg, input_scale=scale,
+                    backend=args.backend or "jnp")
+            else:
+                artifact_lib.save_artifact(
+                    args.save_artifact, cfg=cfg, params=params,
+                    input_scale=scale, backend=args.backend or "jnp")
+            print(f"wrote deployment artifact to {args.save_artifact}")
     feat = None
     if args.sharded:
         # quantize ahead of the loop on a host thread; starts now, so the
@@ -87,11 +144,6 @@ def main():
             utts, lambda u: np.asarray(
                 spike_ops.quantize_input(u, cfg.input_bits, scale)[0]),
             depth=prefetch_depth(args.slots, args.pipeline_depth))
-    engine = CompiledRSNN(
-        cfg, params,
-        EngineConfig(backend=args.backend, precision=args.precision,
-                     input_scale=scale),
-        ccfg=ccfg, cstate=cstate)
 
     if engine.packed is not None:
         rep = sparse.packed_size_report(engine.packed)
@@ -132,9 +184,9 @@ def main():
           f"L0 spikes {1 - np.mean(prof.l0_density):.0%}, "
           f"L1 spikes {1 - np.mean(prof.l1_density):.0%} "
           f"(paper Fig. 18: 57% / 60-71%)")
-    mmac = loop.mmac_per_second(fc_prune_frac=ccfg.fc_prune_frac)
+    mmac = loop.mmac_per_second()  # at the engine's deployed FC pruning
     dense = C.mmac_per_second(cfg, cfg.num_ts,
-                              fc_prune_frac=ccfg.fc_prune_frac)
+                              fc_prune_frac=engine.fc_prune_frac)
     print(f"  zero-skip complexity of this traffic: {mmac:.2f} MMAC/s "
           f"(dense {dense:.2f}; paper's operating point 13.86)")
     top = done[0]

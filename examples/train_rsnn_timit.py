@@ -1,6 +1,7 @@
 """End-to-end driver: the paper's full compression pipeline + TS ablation.
 
-  PYTHONPATH=src python examples/train_rsnn_timit.py [--steps 300] [--full]
+  PYTHONPATH=src python examples/train_rsnn_timit.py [--steps 300] \
+      [--workdir runs/rsnn_pipeline] [--resume] [--artifact DIR]
 
 Runs baseline (hidden 256) -> structured (128) -> unstructured (40% FC) ->
 4-bit QAT, each with inherent temporal training, on the TIMIT-shaped
@@ -8,13 +9,17 @@ synthetic stream; then sweeps time steps (Fig. 16). Writes
 runs/rsnn_pipeline/results.json, which benchmarks/run.py folds into the
 paper-table reproduction (Figs 14/16/18).
 
---full uses the paper's dimensions (256/128, FC 1920); default is the same
-but with fewer steps than the paper's 72 epochs (CPU budget).
+With ``--workdir`` every finished stage is checkpointed
+(training/rsnn_pipeline.py's resumable CompressionPipeline) and
+``--resume`` continues an interrupted run from the last completed stage;
+``--artifact DIR`` additionally packs the QAT stage into the on-disk
+deployment artifact that ``examples/stream_asr.py --artifact DIR`` serves.
 """
 
 import argparse
 import dataclasses
 import json
+import logging
 import sys
 from pathlib import Path
 
@@ -29,9 +34,20 @@ def main():
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--batch", type=int, default=32)
     ap.add_argument("--out", default="runs/rsnn_pipeline")
+    ap.add_argument("--workdir", default=None,
+                    help="checkpoint finished stages here (resumable)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore finished stages instead of retraining")
+    ap.add_argument("--artifact", default=None, metavar="DIR",
+                    help="pack the QAT stage into a deployment artifact")
     args = ap.parse_args()
 
-    results = run_pipeline(steps=args.steps, batch_size=args.batch)
+    # the pipeline emits structured records via logging, not print —
+    # surface them on the console for this interactive entry point
+    logging.basicConfig(level=logging.INFO, format="%(message)s")
+    results = run_pipeline(steps=args.steps, batch_size=args.batch,
+                           workdir=args.workdir, resume=args.resume,
+                           artifact_path=args.artifact)
 
     # Fig. 16: error rate vs number of time steps (on the final QAT model)
     final = results[-1]

@@ -11,4 +11,4 @@ from repro.core.rsnn import (  # noqa: F401
     loss_fn,
 )
 from repro.core.lif import LIFParams, LIFState, init_lif, lif_step, spike_fn  # noqa: F401
-from repro.core import complexity, sparse, spike_ops, temporal  # noqa: F401
+from repro.core import artifact, complexity, sparse, spike_ops, temporal  # noqa: F401

@@ -1,0 +1,286 @@
+"""Versioned on-disk deployment artifact for the compressed RSNN.
+
+The train→compress→pack→serve loop needs a durable contract between the
+training side (``training/rsnn_pipeline.py``'s ``CompressionPipeline``) and
+the serving side (``serving/stream.py``'s ``CompiledRSNN``): this module is
+that contract.  An artifact is a directory
+
+    <path>/
+      manifest.json   — schema version, RSNNConfig, CompressionConfig,
+                        measured SparsityProfile, packed_size_report,
+                        preferred backend, per-tensor shape/dtype index
+      tensors.npz     — every deployed array, verbatim
+
+holding either the **int4** payload (the ``PackedRSNN`` pytree: nibble-
+packed ``QuantTensor``s, padded-CSC ``SparseColumns`` for every pruned
+weight, inference LIF constants) or the **float** payload (the raw
+parameter tree).  Arrays round-trip bit-exactly through ``.npz``, so
+``CompiledRSNN.from_artifact(path)`` produces logits bit-identical to
+serving the same model packed in-process (tests/test_artifact.py proves
+this on float/int4, single-device and sharded).
+
+``SCHEMA_VERSION`` gates compatibility: a reader rejects any manifest
+whose version it does not understand (``ArtifactError``), instead of
+mis-deserializing tensors.  EdgeDRNN (arXiv:1912.12193) and Nimbekar et
+al. (arXiv:2410.16298) treat the compressed artifact as the deployment
+interface; here it is additionally self-describing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rsnn, sparse
+from repro.core.compression.compress import CompressionConfig, PruneSpec
+from repro.core.complexity import SparsityProfile
+from repro.core.rsnn import RSNNConfig
+
+SCHEMA_VERSION = 1
+MANIFEST = "manifest.json"
+TENSORS = "tensors.npz"
+
+
+class ArtifactError(ValueError):
+    """Unreadable, incompatible, or internally inconsistent artifact."""
+
+
+class RSNNArtifact(NamedTuple):
+    """A loaded artifact: the manifest plus exactly one weight payload."""
+
+    manifest: dict
+    cfg: RSNNConfig
+    ccfg: CompressionConfig | None
+    packed: sparse.PackedRSNN | None  # int4 payload
+    params: dict | None  # float payload
+    sparsity: SparsityProfile | None
+    input_scale: jax.Array | None
+
+    @property
+    def precision(self) -> str:
+        return self.manifest["precision"]
+
+    @property
+    def backend(self) -> str | None:
+        return self.manifest.get("backend")
+
+    @property
+    def size_report(self) -> dict | None:
+        return self.manifest.get("size_report")
+
+
+# ------------------------------------------------------------- config codecs
+
+
+def _encode_rsnn_config(cfg: RSNNConfig) -> dict:
+    d = dataclasses.asdict(cfg)
+    d["dtype"] = np.dtype(cfg.dtype).name
+    return d
+
+
+def _decode_rsnn_config(d: dict) -> RSNNConfig:
+    d = dict(d)
+    d["dtype"] = np.dtype(d["dtype"]).type
+    return RSNNConfig(**d)
+
+
+def _encode_compression_config(ccfg: CompressionConfig | None) -> dict | None:
+    if ccfg is None:
+        return None
+    d = dataclasses.asdict(ccfg)  # PruneSpecs become dicts, tuples lists
+    return d
+
+
+def _decode_compression_config(d: dict | None) -> CompressionConfig | None:
+    if d is None:
+        return None
+    d = dict(d)
+    d["prune_names"] = tuple(d["prune_names"])
+    d["quant_names"] = tuple(d["quant_names"])
+    d["prune_specs"] = tuple(
+        (name, PruneSpec(**spec)) for name, spec in d["prune_specs"])
+    return CompressionConfig(**d)
+
+
+def _encode_sparsity(sp: SparsityProfile | None) -> dict | None:
+    return None if sp is None else dataclasses.asdict(sp)
+
+
+def _decode_sparsity(d: dict | None) -> SparsityProfile | None:
+    if d is None:
+        return None
+    d = dict(d)
+    for k in ("l0_density", "l1_density", "fc_density"):
+        d[k] = tuple(d[k])
+    return SparsityProfile(**d)
+
+
+# ------------------------------------------------------------ tensor codecs
+
+
+def _flatten_packed(packed: sparse.PackedRSNN) -> dict[str, np.ndarray]:
+    flat: dict[str, np.ndarray] = {}
+    for name, qt in packed.quant.items():
+        flat[f"quant.{name}.packed"] = np.asarray(qt.packed)
+        flat[f"quant.{name}.scale"] = np.asarray(qt.scale)
+    for name, sc in packed.sparse.items():
+        flat[f"csc.{name}.indices"] = np.asarray(sc.indices)
+        flat[f"csc.{name}.values"] = np.asarray(sc.values)
+        flat[f"csc.{name}.scale"] = np.asarray(sc.scale)
+        if sc.count is not None:
+            flat[f"csc.{name}.count"] = np.asarray(sc.count)
+    for name, arr in packed.lif.items():
+        flat[f"lif.{name}"] = np.asarray(arr)
+    return flat
+
+
+def _unflatten_packed(data) -> sparse.PackedRSNN:
+    quant: dict[str, dict] = {}
+    csc: dict[str, dict] = {}
+    lif: dict[str, jax.Array] = {}
+    for key in data.files:
+        kind, _, rest = key.partition(".")
+        if kind == "quant":
+            name, field = rest.rsplit(".", 1)
+            quant.setdefault(name, {})[field] = jnp.asarray(data[key])
+        elif kind == "csc":
+            name, field = rest.rsplit(".", 1)
+            csc.setdefault(name, {})[field] = jnp.asarray(data[key])
+        elif kind == "lif":
+            lif[rest] = jnp.asarray(data[key])
+    return sparse.PackedRSNN(
+        quant={n: sparse.QuantTensor(**f) for n, f in quant.items()},
+        sparse={n: sparse.SparseColumns(**f) for n, f in csc.items()},
+        lif=lif)
+
+
+def _params_template(cfg: RSNNConfig):
+    """Shape/treedef of ``rsnn.init_params`` without running the RNG."""
+    return jax.eval_shape(lambda k: rsnn.init_params(k, cfg),
+                          jax.random.PRNGKey(0))
+
+
+def _flatten_params(params: dict) -> dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    return {f"params{jax.tree_util.keystr(p)}": np.asarray(leaf)
+            for p, leaf in flat}
+
+
+def _unflatten_params(data, cfg: RSNNConfig) -> dict:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        _params_template(cfg))
+    leaves = []
+    for p, tmpl in flat:
+        key = f"params{jax.tree_util.keystr(p)}"
+        if key not in data.files:
+            raise ArtifactError(f"float artifact is missing tensor {key!r}")
+        leaves.append(jnp.asarray(data[key].astype(tmpl.dtype)))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# ------------------------------------------------------------------ save/load
+
+
+def save_artifact(path: str | Path, *, cfg: RSNNConfig,
+                  packed: sparse.PackedRSNN | None = None,
+                  params: dict | None = None,
+                  ccfg: CompressionConfig | None = None,
+                  sparsity: SparsityProfile | None = None,
+                  input_scale=None, backend: str | None = None) -> Path:
+    """Write a deployment artifact directory; returns its path.
+
+    Exactly one of ``packed`` (int4 payload) / ``params`` (float payload)
+    must be given.  ``input_scale`` is the static 8-bit input calibration
+    the engine serves with (hardware has no per-chunk calibration, so it
+    belongs to the deployed model); ``backend`` names the preferred entry
+    of ``serving/backends.py``.
+    """
+    if (packed is None) == (params is None):
+        raise ValueError("save_artifact needs exactly one of packed/params")
+    if packed is not None and (ccfg is None or ccfg.quant_spec is None):
+        raise ValueError("an int4 artifact needs the CompressionConfig it "
+                         "was packed with (weight_bits set)")
+    path = Path(path)
+    path.mkdir(parents=True, exist_ok=True)
+
+    if packed is not None:
+        precision = "int4"
+        flat = _flatten_packed(packed)
+        size_report = sparse.packed_size_report(packed)
+    else:
+        precision = "float"
+        flat = _flatten_params(params)
+        size_report = None
+    if input_scale is not None:
+        flat["input_scale"] = np.asarray(input_scale, np.float32)
+
+    manifest = {
+        "schema_version": SCHEMA_VERSION,
+        "precision": precision,
+        "rsnn_config": _encode_rsnn_config(cfg),
+        "compression_config": _encode_compression_config(ccfg),
+        "sparsity_profile": _encode_sparsity(sparsity),
+        "size_report": size_report,
+        "backend": backend,
+        "has_input_scale": input_scale is not None,
+        "tensors": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                    for k, v in flat.items()},
+    }
+    # manifest last — and any PREVIOUS manifest gone first: a save that
+    # dies mid-write leaves a manifest-less directory, which load_artifact
+    # rejects, never a stale or truncated manifest paired with new tensors
+    (path / MANIFEST).unlink(missing_ok=True)
+    np.savez(path / TENSORS, **flat)
+    tmp = path / (MANIFEST + ".tmp")
+    tmp.write_text(json.dumps(manifest, indent=1))
+    tmp.rename(path / MANIFEST)  # atomic commit
+    return path
+
+
+def load_artifact(path: str | Path) -> RSNNArtifact:
+    """Read an artifact directory back; bit-exact inverse of save_artifact."""
+    path = Path(path)
+    mf = path / MANIFEST
+    if not mf.exists():
+        raise ArtifactError(f"no artifact at {path} (missing {MANIFEST})")
+    manifest = json.loads(mf.read_text())
+    version = manifest.get("schema_version")
+    if version != SCHEMA_VERSION:
+        raise ArtifactError(
+            f"artifact schema version {version!r} is not supported by this "
+            f"reader (wants {SCHEMA_VERSION}); re-export the artifact")
+    data = np.load(path / TENSORS)
+    declared = manifest.get("tensors", {})
+    missing = sorted(set(declared) - set(data.files))
+    if missing:
+        raise ArtifactError(f"artifact tensors missing from {TENSORS}: "
+                            f"{missing}")
+    for key, meta in declared.items():
+        arr = data[key]
+        if list(arr.shape) != meta["shape"] or str(arr.dtype) != meta["dtype"]:
+            raise ArtifactError(
+                f"tensor {key!r} is {arr.shape}/{arr.dtype}, manifest "
+                f"declares {tuple(meta['shape'])}/{meta['dtype']}")
+
+    cfg = _decode_rsnn_config(manifest["rsnn_config"])
+    ccfg = _decode_compression_config(manifest.get("compression_config"))
+    scale = (jnp.asarray(data["input_scale"])
+             if manifest.get("has_input_scale") else None)
+    packed = params = None
+    if manifest["precision"] == "int4":
+        packed = _unflatten_packed(data)
+    elif manifest["precision"] == "float":
+        params = _unflatten_params(data, cfg)
+    else:
+        raise ArtifactError(
+            f"unknown artifact precision {manifest['precision']!r}")
+    return RSNNArtifact(
+        manifest=manifest, cfg=cfg, ccfg=ccfg, packed=packed, params=params,
+        sparsity=_decode_sparsity(manifest.get("sparsity_profile")),
+        input_scale=scale)

@@ -1,5 +1,9 @@
 from repro.core.compression.pruning import (  # noqa: F401
+    build_mask,
+    channel_prune_mask,
     magnitude_prune_mask,
+    nm_prune_mask,
+    row_prune_mask,
     structured_prune_config,
     apply_masks,
     sparsity_of,
@@ -14,6 +18,7 @@ from repro.core.compression.quantization import (  # noqa: F401
 from repro.core.compression.compress import (  # noqa: F401
     CompressionConfig,
     CompressionState,
+    PruneSpec,
     init_compression,
     materializer,
     compressed_size_bytes,

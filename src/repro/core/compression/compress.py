@@ -18,9 +18,44 @@ from repro.core.compression.quantization import QuantSpec
 
 
 @dataclasses.dataclass(frozen=True)
+class PruneSpec:
+    """One tensor's mask-level pruning recipe (see ``pruning.build_mask``).
+
+    ``kind``: ``magnitude`` (global unstructured, [25]), ``nm`` (N:M
+    semi-structured along the input dim), ``row`` / ``channel``
+    (structured: whole input rows / output channels by L2 norm).
+    ``frac`` is the pruned fraction (ignored by ``nm``, which keeps
+    ``n`` of every ``m`` consecutive rows).
+    """
+
+    kind: str = "magnitude"
+    frac: float = 0.0
+    n: int = 2
+    m: int = 4
+
+    def __post_init__(self):
+        if self.kind not in ("magnitude", "nm", "row", "channel"):
+            raise ValueError(f"unknown prune kind {self.kind!r}")
+        if not 0.0 <= self.frac < 1.0:
+            raise ValueError(f"prune frac must be in [0, 1), got {self.frac}")
+        if self.kind == "nm" and not 1 <= self.n <= self.m:
+            raise ValueError(
+                f"N:M spec needs 1 <= n <= m, got n={self.n} m={self.m}")
+
+    @property
+    def is_noop(self) -> bool:
+        return self.kind != "nm" and self.frac <= 0.0
+
+
+@dataclasses.dataclass(frozen=True)
 class CompressionConfig:
     fc_prune_frac: float = 0.0  # unstructured pruning on the FC layer
     prune_names: tuple[str, ...] = ("fc_w",)
+    # mixed-level pruning: per-tensor specs, e.g.
+    # ``(("l0_wh", PruneSpec("nm", n=2, m=4)), ("fc_w", PruneSpec(frac=0.4)))``.
+    # Any 2-D weight (l0_wx/l0_wh/l1_wx/l1_wh/fc_w) may appear; an explicit
+    # spec overrides the legacy fc_prune_frac/prune_names shorthand.
+    prune_specs: tuple[tuple[str, PruneSpec], ...] = ()
     weight_bits: int | None = None  # None = float weights; 4 = paper setting
     quant_names: tuple[str, ...] = ("l0_wx", "l0_wh", "l1_wx", "l1_wh", "fc_w")
     quant_granularity: str = "per_channel"
@@ -31,16 +66,44 @@ class CompressionConfig:
             return None
         return QuantSpec(bits=self.weight_bits, granularity=self.quant_granularity)
 
+    @property
+    def resolved_prune_specs(self) -> dict[str, PruneSpec]:
+        """The per-tensor prune map actually applied: the legacy
+        ``fc_prune_frac``/``prune_names`` shorthand expanded to magnitude
+        specs, overridden/extended by explicit ``prune_specs`` entries.
+        No-op specs (frac 0) are dropped."""
+        specs: dict[str, PruneSpec] = {}
+        if self.fc_prune_frac > 0.0:
+            for n in self.prune_names:
+                specs[n] = PruneSpec(kind="magnitude", frac=self.fc_prune_frac)
+        for name, spec in self.prune_specs:
+            specs[name] = spec
+        return {n: s for n, s in specs.items() if not s.is_noop}
+
+    @property
+    def fc_prune_fraction(self) -> float:
+        """Deployed pruned fraction of the FC readout, whatever level
+        realised it (drives the zero-skip MMAC/s accounting)."""
+        spec = self.resolved_prune_specs.get("fc_w")
+        if spec is None:
+            return 0.0
+        if spec.kind == "nm":
+            return 1.0 - spec.n / spec.m
+        return spec.frac
+
 
 class CompressionState(NamedTuple):
     masks: dict  # name -> {0,1} mask
 
 
 def init_compression(params: dict, ccfg: CompressionConfig) -> CompressionState:
-    masks = {}
-    if ccfg.fc_prune_frac > 0.0:
-        for n in ccfg.prune_names:
-            masks[n] = pruning.magnitude_prune_mask(params[n], ccfg.fc_prune_frac)
+    specs = ccfg.resolved_prune_specs
+    unknown = sorted(set(specs) - set(params))
+    if unknown:
+        raise ValueError(f"prune specs name tensors absent from the model: "
+                         f"{unknown}; have {sorted(params)}")
+    masks = {n: pruning.build_mask(params[n], spec)
+             for n, spec in specs.items()}
     return CompressionState(masks=masks)
 
 
@@ -72,10 +135,15 @@ def pack_for_inference(params: dict, cfg, ccfg: CompressionConfig,
 
 def compressed_size_bytes(params: dict, ccfg: CompressionConfig,
                           cstate: CompressionState) -> float:
-    """Deployed weight storage: nonzero weights at weight_bits each.
+    """Deployed weight storage: mask-surviving weights at weight_bits each.
 
     (Index overhead is zero in the paper's design: zero-skipping uses input
-    broadcasting, not compressed-sparse weight storage.)
+    broadcasting, not compressed-sparse weight storage.)  This is the
+    Fig. 12 accounting from the *training* side; the deployment packer's
+    ``sparse.packed_size_report(...)["broadcast_total_bytes"]`` computes
+    the same number independently from the packed artifact, and the two
+    agree exactly (tests/test_compression.py) because both count the
+    pruning masks' survivors, not incidental value zeros.
     """
     bits = ccfg.weight_bits or 32
     total_bits = 0.0

@@ -5,6 +5,20 @@ channel width (256 -> 128) directly and train from scratch — so it is a
 config transform, not a mask. Unstructured pruning follows [25]: global
 magnitude pruning of the FC weights (paper removes 40% of FC), realised as
 binary masks applied before the forward pass.
+
+Beyond the config-level width cut, every *mask-realised* pruning level the
+paper's "mixed-level" recipe can mix lives here, dispatched by
+``build_mask`` from a ``compress.PruneSpec``:
+
+  * ``magnitude`` — global unstructured magnitude pruning [25];
+  * ``nm``        — N:M semi-structured sparsity along the input dim
+    (accelerator-friendly regular sparsity);
+  * ``row``       — structured: whole input rows by L2 norm;
+  * ``channel``   — structured: whole output channels by L2 norm.
+
+All of them apply to any 2-D weight (the recurrent matrices
+``l0_wx/l0_wh/l1_wx/l1_wh`` as well as ``fc_w``) via
+``CompressionConfig.prune_specs``.
 """
 
 from __future__ import annotations
@@ -51,9 +65,51 @@ def nm_prune_mask(w: jax.Array, n: int = 2, m: int = 4) -> jax.Array:
     TPU/accelerator-friendly regular sparsity). Keeps the n largest-|w| of
     every m consecutive rows."""
     rows, cols = w.shape
-    assert rows % m == 0, f"rows {rows} not divisible by m={m}"
+    if rows % m:
+        raise ValueError(f"rows {rows} not divisible by m={m}")
     g = jnp.abs(w).reshape(rows // m, m, cols)
     # rank within each group of m; keep top-n
     order = jnp.argsort(jnp.argsort(-g, axis=1), axis=1)
     mask = (order < n).astype(w.dtype)
     return mask.reshape(rows, cols)
+
+
+def _norm_keep(norms: jax.Array, prune_frac: float) -> jax.Array:
+    """{0,1} keep-vector over ``norms``: drop the prune_frac smallest."""
+    k = max(int(round(norms.size * (1.0 - prune_frac))), 1)
+    thresh = jnp.sort(norms)[-k]
+    return (norms >= thresh).astype(norms.dtype)
+
+
+def row_prune_mask(w: jax.Array, prune_frac: float) -> jax.Array:
+    """Structured row pruning: zero whole *input rows* by L2 norm.
+
+    A pruned input row skips one stimulus broadcast per frame on the
+    accelerator — the mask-level analogue of shrinking the upstream layer.
+    """
+    if prune_frac <= 0.0:
+        return jnp.ones_like(w)
+    keep = _norm_keep(jnp.sqrt((w * w).sum(axis=1)), prune_frac)
+    return jnp.broadcast_to(keep[:, None], w.shape).astype(w.dtype)
+
+
+def channel_prune_mask(w: jax.Array, prune_frac: float) -> jax.Array:
+    """Structured channel pruning: zero whole *output channels* by L2 norm."""
+    if prune_frac <= 0.0:
+        return jnp.ones_like(w)
+    keep = _norm_keep(jnp.sqrt((w * w).sum(axis=0)), prune_frac)
+    return jnp.broadcast_to(keep[None, :], w.shape).astype(w.dtype)
+
+
+def build_mask(w: jax.Array, spec) -> jax.Array:
+    """Dispatch a ``compress.PruneSpec`` to its mask builder."""
+    if spec.kind == "magnitude":
+        return magnitude_prune_mask(w, spec.frac)
+    if spec.kind == "nm":
+        return nm_prune_mask(w, spec.n, spec.m)
+    if spec.kind == "row":
+        return row_prune_mask(w, spec.frac)
+    if spec.kind == "channel":
+        return channel_prune_mask(w, spec.frac)
+    raise ValueError(f"unknown prune kind {spec.kind!r}; expected one of "
+                     f"'magnitude', 'nm', 'row', 'channel'")

@@ -52,11 +52,18 @@ class SparseColumns(NamedTuple):
     channel ``n``; ``values[i, n]`` its integer (int4) value held in float32.
     Columns shorter than the densest one are padded with (index 0, value 0),
     so padded entries contribute nothing and no mask is needed.
+
+    ``count[n]`` is the number of *stored* entries of column ``n`` — the
+    pruning decision, which can exceed the nonzero count when a kept weight
+    quantizes to 0.  It exists for exact size accounting
+    (``packed_size_report`` vs ``compression.compressed_size_bytes``) and
+    is ``None`` for layouts built without a mask (kernel oracles).
     """
 
     indices: jax.Array  # (nnz_max, N) int32
     values: jax.Array  # (nnz_max, N) float32, integer-valued in [-8, 7]
     scale: jax.Array  # (1, N) float32
+    count: jax.Array | None = None  # (N,) int32 stored entries per column
 
 
 class PackedRSNN(NamedTuple):
@@ -72,23 +79,29 @@ def dequantize(qt: QuantTensor) -> jax.Array:
     return unpack_int4(qt.packed).astype(jnp.float32) * qt.scale
 
 
-def sparsify_columns(q: jax.Array, scale: jax.Array) -> SparseColumns:
+def sparsify_columns(q: jax.Array, scale: jax.Array,
+                     keep: jax.Array | None = None) -> SparseColumns:
     """Build the padded-CSC view of an int-quantized matrix (host-side).
 
-    q: (K, N) integer-valued; zeros are treated as pruned and skipped.
+    q: (K, N) integer-valued.  ``keep`` is the pruning mask deciding which
+    entries are *stored* (the paper's accounting: storage follows the
+    pruning decision, even when a kept weight quantizes to 0 — those carry
+    value 0 and contribute nothing to the matmul).  ``keep=None`` stores
+    the nonzeros of ``q`` (mask-free oracle layouts).
     """
     qn = np.asarray(q)
-    nz = qn != 0
-    nnz_max = max(int(nz.sum(axis=0).max()), 1)
-    # stable argsort on "is zero": nonzero rows first, original row order kept
-    order = np.argsort(~nz, axis=0, kind="stable")[:nnz_max]
-    taken_nz = np.take_along_axis(nz, order, axis=0)
-    vals = np.where(taken_nz, np.take_along_axis(qn, order, axis=0), 0)
-    idx = np.where(taken_nz, order, 0)
+    kp = (qn != 0) if keep is None else np.asarray(keep).astype(bool)
+    nnz_max = max(int(kp.sum(axis=0).max()), 1)
+    # stable argsort on "is dropped": kept rows first, original row order kept
+    order = np.argsort(~kp, axis=0, kind="stable")[:nnz_max]
+    taken = np.take_along_axis(kp, order, axis=0)
+    vals = np.where(taken, np.take_along_axis(qn, order, axis=0), 0)
+    idx = np.where(taken, order, 0)
     return SparseColumns(
         indices=jnp.asarray(idx, jnp.int32),
         values=jnp.asarray(vals, jnp.float32),
         scale=jnp.asarray(scale, jnp.float32).reshape(1, -1),
+        count=jnp.asarray(kp.sum(axis=0), jnp.int32),
     )
 
 
@@ -127,7 +140,7 @@ def pack_model(params: dict, cfg: RSNNConfig, ccfg: CompressionConfig,
         quant[name] = QuantTensor(packed=pack_int4(q),
                                   scale=jnp.asarray(scale).reshape(1, -1))
         if name in cstate.masks:
-            sparse[name] = sparsify_columns(q, scale)
+            sparse[name] = sparsify_columns(q, scale, keep=cstate.masks[name])
     lif = {}
     for i in (0, 1):
         beta, vth = lif_lib.inference_constants(params[f"lif{i}"],
@@ -147,20 +160,30 @@ def quant_size_bytes(qt: QuantTensor, bits: int = 4) -> float:
     return k * n * bits / 8.0
 
 
+def csc_stored_entries(sc: SparseColumns) -> float:
+    """Stored entries of a CSC layout: the mask-kept count when available
+    (exact Fig. 12 accounting), else the measured nonzeros."""
+    if sc.count is not None:
+        return float(np.asarray(sc.count).sum())
+    return float((np.asarray(sc.values) != 0).sum())
+
+
 def csc_size_bytes(sc: SparseColumns, k_rows: int, bits: int = 4) -> float:
-    """CSC storage: value nibbles + ceil(log2 K)-bit row indices per nonzero."""
-    nnz = float((np.asarray(sc.values) != 0).sum())
+    """CSC storage: value nibbles + ceil(log2 K)-bit row indices per entry."""
     index_bits = max(int(np.ceil(np.log2(max(k_rows, 2)))), 1)
-    return nnz * (bits + index_bits) / 8.0
+    return csc_stored_entries(sc) * (bits + index_bits) / 8.0
 
 
 def packed_size_report(packed: PackedRSNN, bits: int = 4) -> dict:
     """Per-tensor and total deployed bytes, dense-int4 vs zero-skip CSC.
 
-    ``broadcast_total_bytes`` is the paper's Fig. 12 accounting: nonzero
-    weights at ``bits`` each with zero index overhead (the accelerator
-    zero-skips by input broadcasting, not compressed weight storage) —
-    100864 B = 0.1 MB for the paper's pruned model.
+    ``broadcast_total_bytes`` is the paper's Fig. 12 accounting: stored
+    (mask-surviving) weights at ``bits`` each with zero index overhead (the
+    accelerator zero-skips by input broadcasting, not compressed weight
+    storage) — 100864 B = 0.1 MB for the paper's pruned model.  It equals
+    ``compression.compressed_size_bytes`` computed from the float model
+    whenever every 2-D weight is quantized (the deployable case); the
+    agreement is asserted in tests/test_compression.py.
     """
     report: dict[str, dict] = {}
     total = 0.0
@@ -172,7 +195,7 @@ def packed_size_report(packed: PackedRSNN, bits: int = 4) -> dict:
         if name in packed.sparse:
             sc = packed.sparse[name]
             entry["csc_int4"] = csc_size_bytes(sc, qt.packed.shape[0] * 2, bits)
-            nnz_bytes = float((np.asarray(sc.values) != 0).sum()) * bits / 8.0
+            nnz_bytes = csc_stored_entries(sc) * bits / 8.0
         entry["nnz_int4"] = nnz_bytes
         report[name] = entry
         total += min(entry["dense_int4"],

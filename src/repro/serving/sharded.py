@@ -36,6 +36,12 @@ overridden — and the jitted step wraps the same ``_frame_step``, so logits
 are identical to the single-device loop on the same utterance set
 (tests/test_sharded_stream.py proves this on 8 virtual devices, pipelined
 against the synchronous single-device baseline).
+
+An engine built with ``CompiledRSNN.from_artifact`` (the on-disk
+deployment artifact of ``core/artifact.py``) drops in unchanged: the
+constructor replicates whatever weight payload the engine carries via
+``place_weights``, so artifact-served sharded logits match the in-memory
+model bit for bit (tests/test_artifact.py).
 """
 
 from __future__ import annotations

@@ -51,6 +51,9 @@ kernels), ``sparse`` (pallas + the fused zero-skip CSC FC of
 ``core/sparse.py``; ``sparse_fc`` additionally routes the pruned FC through
 the zero-skipping CSC path of the chosen backend.  New kernels plug in by
 registering a backend; the engine itself never selects kernels.
+``CompiledRSNN.from_artifact`` builds the engine from the versioned
+on-disk artifact of ``core/artifact.py`` (the compression pipeline's
+output) with logits bit-identical to packing in-process.
 
 Scaling out: ``serving/sharded.py`` runs this same loop with the slot
 batch, recurrent state, pinned frame buffer, and logit ring sharded over a
@@ -141,21 +144,30 @@ class CompiledRSNN:
     frame/slot lifecycle.
     """
 
-    def __init__(self, cfg: RSNNConfig, params: dict,
+    def __init__(self, cfg: RSNNConfig, params: dict | None,
                  engine: EngineConfig = EngineConfig(),
                  ccfg: CompressionConfig | None = None,
-                 cstate: CompressionState | None = None):
+                 cstate: CompressionState | None = None, *,
+                 packed: sparse.PackedRSNN | None = None):
         self.cfg = cfg
         self.engine = engine
         self.packed: sparse.PackedRSNN | None = None
 
         if engine.precision == "int4":
-            if ccfg is None or ccfg.quant_spec is None:
-                raise ValueError("int4 precision needs a CompressionConfig "
-                                 "with weight_bits set")
-            if cstate is None:
-                cstate = init_compression(params, ccfg)
-            self.packed = sparse.pack_model(params, cfg, ccfg, cstate)
+            if packed is not None:
+                # pre-packed deployment payload (core/artifact.py): no
+                # float params needed, the packer already ran elsewhere
+                self.packed = packed
+            else:
+                if params is None:
+                    raise ValueError("int4 precision needs params to pack "
+                                     "(or a pre-packed model via packed=)")
+                if ccfg is None or ccfg.quant_spec is None:
+                    raise ValueError("int4 precision needs a CompressionConfig "
+                                     "with weight_bits set")
+                if cstate is None:
+                    cstate = init_compression(params, ccfg)
+                self.packed = sparse.pack_model(params, cfg, ccfg, cstate)
             if engine.wants_sparse_fc and "fc_w" not in self.packed.sparse:
                 raise ValueError("sparse_fc needs an unstructured-pruned "
                                  "fc_w (set ccfg.fc_prune_frac > 0)")
@@ -177,6 +189,8 @@ class CompiledRSNN:
             quant, csc = dict(self.packed.quant), dict(self.packed.sparse)
             self._lif = self.packed.lif
         else:
+            if params is None:
+                raise ValueError("float precision needs the parameter tree")
             dense = {n: params[n] for n in cfg.layer_shapes}
             quant, csc = {}, {}
             self._lif = {}
@@ -194,8 +208,9 @@ class CompiledRSNN:
         self._w = self._ctx.dense
 
         # deployed FC pruning fraction, for measured-MMAC/s accounting
-        self.fc_prune_frac = (ccfg.fc_prune_frac
-                              if engine.precision == "int4" else 0.0)
+        self.fc_prune_frac = (ccfg.fc_prune_fraction
+                              if engine.precision == "int4" and ccfg is not None
+                              else 0.0)
         scale = engine.input_scale
         self._input_scale = None if scale is None else jnp.asarray(scale)
         self._compile()
@@ -222,6 +237,37 @@ class CompiledRSNN:
         if self._input_scale is not None:
             self._input_scale = put(self._input_scale)
         self._compile()
+
+    @classmethod
+    def from_artifact(cls, path, engine: EngineConfig | None = None, *,
+                      backend: str | None = None) -> "CompiledRSNN":
+        """Build an engine straight from an on-disk deployment artifact
+        (``core/artifact.py``) — the serving end of the train→compress→
+        pack→serve loop.  Logits are bit-identical to serving the same
+        model packed in-process (tests/test_artifact.py).
+
+        ``engine=None`` derives the execution path from the manifest: the
+        artifact's precision, its preferred backend (overridable via
+        ``backend=``), and its stored static input scale.  An explicit
+        ``engine`` is used verbatim and must match the artifact's
+        precision.
+        """
+        from repro.core import artifact as artifact_lib
+
+        art = artifact_lib.load_artifact(path)
+        if engine is None:
+            engine = EngineConfig(
+                backend=backend or art.backend or "jnp",
+                precision=art.precision,
+                input_scale=art.input_scale)
+        elif engine.precision != art.precision:
+            raise ValueError(
+                f"engine precision {engine.precision!r} does not match the "
+                f"artifact's {art.precision!r} payload")
+        if art.precision == "int4":
+            return cls(art.cfg, None, engine, ccfg=art.ccfg,
+                       packed=art.packed)
+        return cls(art.cfg, art.params, engine, ccfg=art.ccfg)
 
     # ------------------------------------------------------------ frontend
 

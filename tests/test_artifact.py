@@ -1,0 +1,243 @@
+"""The on-disk deployment artifact (core/artifact.py): save→load→serve
+round trips must be bit-identical to serving the in-memory ``PackedRSNN``
+on float and int4 paths, single-device and sharded; incompatible or
+corrupted artifacts must be rejected with ``ArtifactError``."""
+
+import json
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import artifact, rsnn, sparse
+from repro.core.complexity import SparsityProfile
+from repro.core.compression import (CompressionConfig, PruneSpec,
+                                    init_compression)
+from repro.serving import stream as S
+from repro.serving.sharded import ShardedStreamLoop
+
+
+@pytest.fixture
+def setup(small_cfg, rng_key):
+    params = rsnn.init_params(rng_key, small_cfg)
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(2, 10, small_cfg.input_dim)), jnp.float32)
+    scale = S.calibrate_input_scale(x, small_cfg.input_bits)
+    return small_cfg, params, x, scale
+
+
+def _int4_artifact(tmp_path, cfg, params, scale,
+                   ccfg=None) -> tuple[Path, CompressionConfig, object]:
+    ccfg = ccfg or CompressionConfig(fc_prune_frac=0.4, weight_bits=4)
+    cstate = init_compression(params, ccfg)
+    packed = sparse.pack_model(params, cfg, ccfg, cstate)
+    path = artifact.save_artifact(tmp_path / "art", cfg=cfg, packed=packed,
+                                  ccfg=ccfg, input_scale=scale, backend="jnp")
+    return path, ccfg, cstate
+
+
+# ----------------------------------------------------------- bit parity
+
+
+def test_int4_roundtrip_bitwise_equals_in_memory(setup, tmp_path):
+    """from_artifact == packing in-process, bit for bit, chunked."""
+    cfg, params, x, scale = setup
+    path, ccfg, cstate = _int4_artifact(tmp_path, cfg, params, scale)
+    mem = S.CompiledRSNN(cfg, params,
+                         S.EngineConfig(precision="int4", input_scale=scale),
+                         ccfg, cstate)
+    art = S.CompiledRSNN.from_artifact(path)
+    assert art.engine.precision == "int4"
+    assert art.fc_prune_frac == ccfg.fc_prune_frac
+    la, sa, _ = art.run(x[:, :4])
+    lb, sb, _ = mem.run(x[:, :4])
+    np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    la2, _, _ = art.run(x[:, 4:], sa)
+    lb2, _, _ = mem.run(x[:, 4:], sb)
+    np.testing.assert_array_equal(np.asarray(la2), np.asarray(lb2))
+
+
+def test_float_roundtrip_bitwise_equals_in_memory(setup, tmp_path):
+    cfg, params, x, scale = setup
+    path = artifact.save_artifact(tmp_path / "art", cfg=cfg, params=params,
+                                  input_scale=scale)
+    mem = S.CompiledRSNN(cfg, params, S.EngineConfig(input_scale=scale))
+    art = S.CompiledRSNN.from_artifact(path)
+    assert art.engine.precision == "float"
+    la, _, _ = art.run(x)
+    lb, _, _ = mem.run(x)
+    np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_streamloop_serves_artifact_bitwise(setup, tmp_path):
+    """Slot-batched StreamLoop over an artifact engine == in-memory."""
+    cfg, params, x, scale = setup
+    path, ccfg, cstate = _int4_artifact(tmp_path, cfg, params, scale)
+    mem = S.CompiledRSNN(cfg, params,
+                         S.EngineConfig(precision="int4", input_scale=scale),
+                         ccfg, cstate)
+    art = S.CompiledRSNN.from_artifact(path)
+    lens = [7, 10, 4]
+    rng = np.random.default_rng(5)
+    utts = [rng.normal(size=(t, cfg.input_dim)).astype(np.float32)
+            for t in lens]
+    done = []
+    for eng in (mem, art):
+        loop = S.StreamLoop(eng, batch_slots=2)
+        for u in utts:
+            loop.submit(u)
+        done.append(loop.run())
+    for a, b in zip(*done):
+        np.testing.assert_array_equal(a.stacked_logits(), b.stacked_logits())
+
+
+def test_sharded_loop_serves_artifact_bitwise(setup, tmp_path):
+    """ShardedStreamLoop over a from_artifact engine == the single-device
+    in-memory loop (1-device mesh in-process; the 8-virtual-device case is
+    covered by the sharded suite's subprocess tests)."""
+    cfg, params, x, scale = setup
+    path, ccfg, cstate = _int4_artifact(tmp_path, cfg, params, scale)
+    utts = [np.asarray(x[0, :6]), np.asarray(x[1, :9]), np.asarray(x[0, 3:8])]
+
+    mem = S.CompiledRSNN(cfg, params,
+                         S.EngineConfig(precision="int4", input_scale=scale),
+                         ccfg, cstate)
+    loop1 = S.StreamLoop(mem, batch_slots=2)
+    for u in utts:
+        loop1.submit(u)
+    done1 = loop1.run()
+
+    art = S.CompiledRSNN.from_artifact(path)
+    loop2 = ShardedStreamLoop(art, batch_slots=2, max_frames=16)
+    for u in utts:
+        loop2.submit(u)
+    done2 = loop2.run()
+
+    for a, b in zip(done1, done2):
+        np.testing.assert_array_equal(a.stacked_logits(), b.stacked_logits())
+
+
+def test_mixed_prune_spec_artifact_roundtrip(setup, tmp_path):
+    """Recurrent-matrix prune specs survive the artifact: config round-trips
+    by value and the served logits stay bit-identical."""
+    cfg, params, x, scale = setup
+    ccfg = CompressionConfig(weight_bits=4, prune_specs=(
+        ("fc_w", PruneSpec(kind="magnitude", frac=0.4)),
+        ("l0_wh", PruneSpec(kind="nm", n=2, m=4)),
+        ("l1_wh", PruneSpec(kind="row", frac=0.25)),
+    ))
+    path, ccfg, cstate = _int4_artifact(tmp_path, cfg, params, scale,
+                                        ccfg=ccfg)
+    loaded = artifact.load_artifact(path)
+    assert loaded.ccfg == ccfg  # dataclass equality incl. nested PruneSpecs
+    assert set(loaded.packed.sparse) == {"fc_w", "l0_wh", "l1_wh"}
+    mem = S.CompiledRSNN(cfg, params,
+                         S.EngineConfig(precision="int4", input_scale=scale),
+                         ccfg, cstate)
+    art = S.CompiledRSNN.from_artifact(path)
+    la, _, _ = art.run(x)
+    lb, _, _ = mem.run(x)
+    np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# ------------------------------------------------------- manifest contract
+
+
+def test_manifest_roundtrips_configs_and_sparsity(setup, tmp_path):
+    cfg, params, _, scale = setup
+    sp = SparsityProfile(input_bit_density=0.4, l0_density=(0.3, 0.35),
+                         l1_density=(0.2, 0.25), fc_density=(0.2, 0.25),
+                         fc_union_density=0.4)
+    ccfg = CompressionConfig(fc_prune_frac=0.4, weight_bits=4)
+    cstate = init_compression(params, ccfg)
+    packed = sparse.pack_model(params, cfg, ccfg, cstate)
+    path = artifact.save_artifact(tmp_path / "a", cfg=cfg, packed=packed,
+                                  ccfg=ccfg, sparsity=sp, input_scale=scale,
+                                  backend="sparse")
+    art = artifact.load_artifact(path)
+    assert art.cfg == cfg
+    assert art.ccfg == ccfg
+    assert art.sparsity == sp
+    assert art.backend == "sparse"
+    np.testing.assert_array_equal(np.asarray(art.input_scale),
+                                  np.asarray(scale))
+    # size report in the manifest is the unified Fig. 12 accounting
+    rep = sparse.packed_size_report(packed)
+    assert art.size_report["broadcast_total_bytes"] == \
+        rep["broadcast_total_bytes"]
+
+
+def test_rejects_unknown_schema_version(setup, tmp_path):
+    cfg, params, _, scale = setup
+    path, _, _ = _int4_artifact(tmp_path, cfg, params, scale)
+    mf = path / artifact.MANIFEST
+    m = json.loads(mf.read_text())
+    m["schema_version"] = artifact.SCHEMA_VERSION + 1
+    mf.write_text(json.dumps(m))
+    with pytest.raises(artifact.ArtifactError, match="schema version"):
+        artifact.load_artifact(path)
+
+
+def test_rejects_missing_manifest(tmp_path):
+    with pytest.raises(artifact.ArtifactError, match="manifest"):
+        artifact.load_artifact(tmp_path / "nothing_here")
+
+
+def test_reexport_crash_leaves_no_stale_manifest(setup, tmp_path,
+                                                 monkeypatch):
+    """A save that dies mid-write over an EXISTING artifact must leave a
+    directory load_artifact rejects — never the old manifest paired with
+    new tensors."""
+    cfg, params, _, scale = setup
+    path, ccfg, cstate = _int4_artifact(tmp_path, cfg, params, scale)
+    artifact.load_artifact(path)  # healthy before the failed re-export
+
+    def boom(*a, **k):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(artifact.np, "savez", boom)
+    with pytest.raises(OSError):
+        packed = sparse.pack_model(params, cfg, ccfg, cstate)
+        artifact.save_artifact(path, cfg=cfg, packed=packed, ccfg=ccfg,
+                               input_scale=scale)
+    monkeypatch.undo()
+    with pytest.raises(artifact.ArtifactError, match="manifest"):
+        artifact.load_artifact(path)
+
+
+def test_rejects_tensor_shape_mismatch(setup, tmp_path):
+    """A manifest disagreeing with the tensor payload fails integrity
+    checking instead of mis-deserializing."""
+    cfg, params, _, scale = setup
+    path, _, _ = _int4_artifact(tmp_path, cfg, params, scale)
+    mf = path / artifact.MANIFEST
+    m = json.loads(mf.read_text())
+    key = "quant.fc_w.packed"
+    m["tensors"][key]["shape"] = [1, 1]
+    mf.write_text(json.dumps(m))
+    with pytest.raises(artifact.ArtifactError, match="manifest declares"):
+        artifact.load_artifact(path)
+
+
+def test_save_requires_exactly_one_payload(setup, tmp_path):
+    cfg, params, _, _ = setup
+    with pytest.raises(ValueError, match="exactly one"):
+        artifact.save_artifact(tmp_path / "x", cfg=cfg)
+    ccfg = CompressionConfig(fc_prune_frac=0.4, weight_bits=4)
+    cstate = init_compression(params, ccfg)
+    packed = sparse.pack_model(params, cfg, ccfg, cstate)
+    with pytest.raises(ValueError, match="exactly one"):
+        artifact.save_artifact(tmp_path / "x", cfg=cfg, packed=packed,
+                               params=params, ccfg=ccfg)
+    with pytest.raises(ValueError, match="CompressionConfig"):
+        artifact.save_artifact(tmp_path / "x", cfg=cfg, packed=packed)
+
+
+def test_from_artifact_precision_mismatch_fails(setup, tmp_path):
+    cfg, params, _, scale = setup
+    path, _, _ = _int4_artifact(tmp_path, cfg, params, scale)
+    with pytest.raises(ValueError, match="precision"):
+        S.CompiledRSNN.from_artifact(
+            path, engine=S.EngineConfig(precision="float",
+                                        input_scale=scale))

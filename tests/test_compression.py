@@ -9,9 +9,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.compression import (CompressionConfig, init_compression,
-                                    materializer, compressed_size_bytes,
-                                    pruning, quantization)
+from repro.core.compression import (CompressionConfig, PruneSpec,
+                                    init_compression, materializer,
+                                    compressed_size_bytes, pruning,
+                                    quantization)
 from repro.core.compression.quantization import QuantSpec
 
 try:
@@ -61,6 +62,55 @@ def _check_int4_pack_roundtrip(k, n, seed):
     np.testing.assert_array_equal(out, q)
 
 
+def _check_prune_spec_invariants(kind, rows, cols, frac, n, m, seed):
+    """Mask shape / {0,1} values / kept-fraction (or N:M) invariants of the
+    per-tensor prune specs, checked through init_compression, the
+    materializer, and pack_model."""
+    from repro.core import sparse
+    from repro.core.rsnn import RSNNConfig, init_params
+
+    spec = PruneSpec(kind=kind, frac=frac, n=n, m=m)
+    w = jnp.asarray(np.random.default_rng(seed).normal(size=(rows, cols)),
+                    jnp.float32)
+    mask = np.asarray(pruning.build_mask(w, spec))
+    assert mask.shape == w.shape
+    assert set(np.unique(mask)) <= {0.0, 1.0}
+    if kind == "nm":
+        groups = mask.reshape(rows // m, m, cols).sum(axis=1)
+        np.testing.assert_array_equal(groups, n)  # exactly n of every m
+    elif kind == "magnitude":
+        assert mask.sum() >= max(1, int(round(mask.size * (1 - frac))) - 1)
+    elif kind == "row":
+        kept_rows = np.flatnonzero(mask.any(axis=1))
+        # whole rows survive or die, count follows frac (ties keep extra)
+        np.testing.assert_array_equal(mask[kept_rows], 1.0)
+        assert len(kept_rows) >= max(1, int(round(rows * (1 - frac))))
+    elif kind == "channel":
+        kept_cols = np.flatnonzero(mask.any(axis=0))
+        np.testing.assert_array_equal(mask[:, kept_cols], 1.0)
+        assert len(kept_cols) >= max(1, int(round(cols * (1 - frac))))
+
+    # through the config/materializer/packer: a small RSNN whose l0_wh has
+    # this spec (hidden_dim = rows so the square recurrent shape matches)
+    spec_is_noop = kind != "nm" and frac <= 0.0
+    if rows != cols or rows % 2 or spec_is_noop:
+        return  # packer needs even dims + a real spec; mask checks ran above
+    cfg = RSNNConfig(input_dim=4, hidden_dim=rows, fc_dim=6, num_ts=2)
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    ccfg = CompressionConfig(weight_bits=4,
+                             prune_specs=(("l0_wh", spec),))
+    cstate = init_compression(params, ccfg)
+    m_l0 = np.asarray(cstate.masks["l0_wh"])
+    eff = materializer(ccfg, cstate)(params)
+    assert np.all(np.asarray(eff["l0_wh"])[m_l0 == 0] == 0.0)
+    packed = sparse.pack_model(params, cfg, ccfg, cstate)
+    sc = packed.sparse["l0_wh"]
+    # the CSC stores exactly the mask survivors (unified size accounting)
+    assert float(np.asarray(sc.count).sum()) == float(m_l0.sum())
+    assert np.all(np.asarray(sparse.dequantize(packed.quant["l0_wh"]))
+                  [m_l0 == 0] == 0.0)
+
+
 # --------------------------------------- deterministic tier (always runs)
 
 
@@ -80,6 +130,20 @@ def test_fake_quant_error_bound(bits, per_channel):
 @pytest.mark.parametrize("k,n,seed", [(1, 1, 0), (8, 16, 1), (32, 5, 2)])
 def test_int4_pack_roundtrip(k, n, seed):
     _check_int4_pack_roundtrip(k, n, seed)
+
+
+@pytest.mark.parametrize("kind,rows,cols,frac,n,m,seed", [
+    ("magnitude", 16, 16, 0.4, 2, 4, 0),
+    ("magnitude", 12, 7, 0.9, 2, 4, 1),
+    ("nm", 16, 16, 0.0, 2, 4, 2),
+    ("nm", 8, 8, 0.0, 1, 4, 3),
+    ("row", 16, 16, 0.25, 2, 4, 4),
+    ("row", 20, 5, 0.5, 2, 4, 5),
+    ("channel", 16, 16, 0.5, 2, 4, 6),
+    ("channel", 6, 24, 0.25, 2, 4, 7),
+])
+def test_prune_spec_invariants(kind, rows, cols, frac, n, m, seed):
+    _check_prune_spec_invariants(kind, rows, cols, frac, n, m, seed)
 
 
 # -------------------------------------------- fuzzed tier (hypothesis only)
@@ -104,6 +168,15 @@ if HAVE_HYPOTHESIS:
            seed=st.integers(0, 2**31 - 1))
     def test_int4_pack_roundtrip_fuzzed(k, n, seed):
         _check_int4_pack_roundtrip(k, n, seed)
+
+    @settings(max_examples=15, deadline=None)
+    @given(kind=st.sampled_from(["magnitude", "nm", "row", "channel"]),
+           hidden=st.sampled_from([8, 12, 16]),  # even: the packer nibbles
+           frac=st.floats(0.0, 0.9), nm_n=st.integers(1, 4),
+           seed=st.integers(0, 2**31 - 1))
+    def test_prune_spec_invariants_fuzzed(kind, hidden, frac, nm_n, seed):
+        _check_prune_spec_invariants(kind, hidden, hidden, frac,
+                                     n=nm_n, m=4, seed=seed)
 
 
 # ------------------------------------------------------------- unit tests
@@ -130,6 +203,62 @@ def test_pipeline_size_accounting_matches_paper_ratio():
     ccfg = CompressionConfig(fc_prune_frac=0.4, weight_bits=4)
     cstate = init_compression(params, ccfg)
     assert compressed_size_bytes(params, ccfg, cstate) == 100864.0  # 0.1 MB
+
+
+@pytest.mark.parametrize("ccfg", [
+    CompressionConfig(fc_prune_frac=0.4, weight_bits=4),
+    CompressionConfig(weight_bits=4, prune_specs=(
+        ("fc_w", PruneSpec(kind="magnitude", frac=0.4)),
+        ("l0_wh", PruneSpec(kind="nm", n=2, m=4)),
+        ("l1_wx", PruneSpec(kind="row", frac=0.25)),
+        ("l1_wh", PruneSpec(kind="channel", frac=0.5)),
+    )),
+])
+def test_size_accounting_sources_agree(ccfg):
+    """The Fig. 12 number computed two independent ways — training-side
+    ``compressed_size_bytes`` (params + masks) and the deployment packer's
+    ``packed_size_report`` (the packed artifact) — must agree exactly."""
+    from repro.core import sparse
+    from repro.core.rsnn import RSNNConfig, init_params
+
+    cfg = RSNNConfig(input_dim=8, hidden_dim=16, fc_dim=24, num_ts=2)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    cstate = init_compression(params, ccfg)
+    packed = sparse.pack_model(params, cfg, ccfg, cstate)
+    rep = sparse.packed_size_report(packed)
+    assert rep["broadcast_total_bytes"] == \
+        compressed_size_bytes(params, ccfg, cstate)
+
+
+def test_prune_spec_validation():
+    with pytest.raises(ValueError, match="kind"):
+        PruneSpec(kind="banana")
+    with pytest.raises(ValueError, match="frac"):
+        PruneSpec(frac=1.0)
+    with pytest.raises(ValueError, match="n <= m"):
+        PruneSpec(kind="nm", n=0)  # would silently prune everything
+    with pytest.raises(ValueError, match="n <= m"):
+        PruneSpec(kind="nm", n=5, m=4)  # negative "pruned fraction"
+    with pytest.raises(ValueError, match="n <= m"):
+        PruneSpec(kind="nm", m=0)  # div-by-zero deep in nm_prune_mask
+    # legacy shorthand and explicit specs resolve together, explicit wins
+    ccfg = CompressionConfig(fc_prune_frac=0.4, prune_specs=(
+        ("fc_w", PruneSpec(kind="magnitude", frac=0.6)),))
+    assert ccfg.resolved_prune_specs["fc_w"].frac == 0.6
+    assert ccfg.fc_prune_fraction == 0.6
+    assert CompressionConfig(prune_specs=(
+        ("fc_w", PruneSpec(kind="nm", n=1, m=4)),)).fc_prune_fraction == 0.75
+    assert CompressionConfig().resolved_prune_specs == {}
+
+
+def test_init_compression_rejects_unknown_tensor():
+    from repro.core.rsnn import RSNNConfig, init_params
+    params = init_params(jax.random.PRNGKey(0),
+                         RSNNConfig(input_dim=8, hidden_dim=16, fc_dim=12))
+    ccfg = CompressionConfig(prune_specs=(
+        ("not_a_tensor", PruneSpec(frac=0.5)),))
+    with pytest.raises(ValueError, match="not_a_tensor"):
+        init_compression(params, ccfg)
 
 
 def test_materializer_masks_and_quantizes():

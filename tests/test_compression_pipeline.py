@@ -1,0 +1,218 @@
+"""The resumable CompressionPipeline driver: declarative stages, per-stage
+checkpoints, manifest-gated resume (a run killed after stage k restores
+stages <= k bit-for-bit instead of retraining), structured metric records,
+and the artifact export seam."""
+
+import numpy as np
+import pytest
+
+from repro.core import artifact
+from repro.core.compression import CompressionConfig
+from repro.core.rsnn import RSNNConfig
+from repro.data.synthetic import SpeechDataConfig, TimitLikeStream
+from repro.serving import stream as S
+from repro.training.rsnn_pipeline import (CompressionPipeline, PipelineStage,
+                                          export_artifact, paper_stages)
+
+CFG = RSNNConfig(input_dim=8, hidden_dim=16, fc_dim=12, num_ts=2)
+QAT = CompressionConfig(fc_prune_frac=0.4, weight_bits=4)
+
+
+def _stream():
+    return TimitLikeStream(SpeechDataConfig(input_dim=8, num_classes=12,
+                                            frames=6))
+
+
+def _stages():
+    return (
+        PipelineStage("baseline", CFG),
+        PipelineStage("qat4", CFG, QAT, init_from="baseline"),
+    )
+
+
+def _pipe(workdir):
+    return CompressionPipeline(_stages(), _stream(), workdir=workdir,
+                               steps=2, batch_size=2, eval_batches=1,
+                               log_every=1, metric_sink=lambda r: None)
+
+
+def test_interrupted_recipe_resumes_without_retraining(tmp_path):
+    """Kill after stage 1; resume must restore stage 1 from its checkpoint
+    (bit-identical params, zero train steps) and only train stage 2."""
+    first = _pipe(tmp_path)
+    results = first.run(stop_after="baseline")
+    assert [r.name for r in results] == ["baseline"]
+    want = {k: np.asarray(v) for k, v in results[0].params.items()
+            if k.endswith("_w") or k.endswith("wx") or k.endswith("wh")}
+
+    second = _pipe(tmp_path)
+    resumed = second.run(resume=True)
+    assert [r.name for r in resumed] == ["baseline", "qat4"]
+    events = [r["event"] for r in second.history["baseline"]]
+    assert events == ["restored"]  # no train/eval records: nothing re-ran
+    assert any(r["event"] == "train" for r in second.history["qat4"])
+    for k, v in want.items():
+        np.testing.assert_array_equal(np.asarray(resumed[0].params[k]), v)
+    # restored metrics match what stage 1 measured before the kill
+    assert resumed[0].error_rate == results[0].error_rate
+    assert resumed[0].sparsity == results[0].sparsity
+    assert resumed[0].size_bytes == results[0].size_bytes
+
+
+def test_resume_noop_when_all_stages_done(tmp_path):
+    first = _pipe(tmp_path).run()
+    again = _pipe(tmp_path)
+    resumed = again.run(resume=True)
+    assert [r.name for r in resumed] == ["baseline", "qat4"]
+    for name in ("baseline", "qat4"):
+        assert [r["event"] for r in again.history[name]] == ["restored"]
+    # the restored compression state carries the TRAINING-TIME masks (cut
+    # from the seed params), not masks recomputed from the final params —
+    # masked weights stay frozen at init, so recomputing would flip
+    # entries and change the deployed sparsity pattern
+    assert set(resumed[1].cstate.masks) == set(first[1].cstate.masks)
+    for k, m in first[1].cstate.masks.items():
+        np.testing.assert_array_equal(np.asarray(resumed[1].cstate.masks[k]),
+                                      np.asarray(m))
+
+
+def test_resume_refuses_changed_recipe(tmp_path):
+    _pipe(tmp_path).run(stop_after="baseline")
+    changed = CompressionPipeline(_stages(), _stream(), workdir=tmp_path,
+                                  steps=3, batch_size=2, eval_batches=1,
+                                  metric_sink=lambda r: None)
+    with pytest.raises(ValueError, match="different\\s+recipe"):
+        changed.run(resume=True)
+
+
+def test_resume_invalidates_downstream_of_changed_stage(tmp_path):
+    """Fingerprints chain through init_from: retraining an upstream stage
+    under an edited recipe must also refuse to restore the stages
+    fine-tuned from it — otherwise resume silently serves weights seeded
+    by the OLD upstream."""
+    import shutil
+
+    _pipe(tmp_path).run()  # both stages done on disk
+    # follow the refusal message's own advice for the edited upstream:
+    # delete its stage dir so it retrains under the new recipe...
+    shutil.rmtree(tmp_path / "stages" / "baseline")
+    upstream_changed = (
+        PipelineStage("baseline", CFG, seed=123),  # edited recipe
+        PipelineStage("qat4", CFG, QAT, init_from="baseline"),  # untouched
+    )
+    pipe = CompressionPipeline(upstream_changed, _stream(), workdir=tmp_path,
+                               steps=2, batch_size=2, eval_batches=1,
+                               metric_sink=lambda r: None)
+    # ...but the downstream stage, though its own recipe is untouched, was
+    # checkpointed against the OLD baseline and must refuse to restore
+    with pytest.raises(ValueError, match="qat4.*different\\s+recipe"):
+        pipe.run(resume=True)
+
+
+def test_resume_refuses_changed_data_config(tmp_path):
+    """The data the stages trained on is part of the recipe fingerprint."""
+    _pipe(tmp_path).run(stop_after="baseline")
+    other_data = TimitLikeStream(SpeechDataConfig(input_dim=8,
+                                                  num_classes=12, frames=9))
+    pipe = CompressionPipeline(_stages(), other_data, workdir=tmp_path,
+                               steps=2, batch_size=2, eval_batches=1,
+                               metric_sink=lambda r: None)
+    with pytest.raises(ValueError, match="different\\s+recipe"):
+        pipe.run(resume=True)
+
+
+def test_resume_requires_workdir():
+    pipe = CompressionPipeline(_stages(), _stream(), steps=1, batch_size=2,
+                               eval_batches=1, metric_sink=lambda r: None)
+    with pytest.raises(ValueError, match="workdir"):
+        pipe.run(resume=True)
+
+
+def test_run_pipeline_rejects_artifact_on_unquantized_stop(tmp_path):
+    """--artifact + --stop-after on a pre-QAT stage must fail before any
+    training happens, not after the whole run."""
+    from repro.training.rsnn_pipeline import run_pipeline
+    with pytest.raises(ValueError, match="quantized stage"):
+        run_pipeline(steps=1, batch_size=2, hidden_base=8, hidden_pruned=8,
+                     data_cfg=SpeechDataConfig(input_dim=8, num_classes=12,
+                                               frames=6),
+                     workdir=tmp_path, stop_after="baseline",
+                     artifact_path=tmp_path / "a")
+    assert not (tmp_path / "stages").exists()  # nothing trained
+
+
+def test_stage_validation():
+    with pytest.raises(ValueError, match="duplicate"):
+        CompressionPipeline((PipelineStage("a", CFG),
+                             PipelineStage("a", CFG)), _stream())
+    with pytest.raises(ValueError, match="earlier stage"):
+        CompressionPipeline((PipelineStage("a", CFG, init_from="b"),
+                             PipelineStage("b", CFG)), _stream())
+    with pytest.raises(ValueError, match="not a stage"):
+        CompressionPipeline((PipelineStage("a", CFG),),
+                            _stream()).run(stop_after="zzz")
+
+
+def test_metric_records_are_structured(tmp_path):
+    records = []
+    pipe = CompressionPipeline((PipelineStage("baseline", CFG),), _stream(),
+                               workdir=tmp_path, steps=2, batch_size=2,
+                               eval_batches=1, log_every=1,
+                               metric_sink=records.append)
+    pipe.run()
+    assert {r["event"] for r in records} == {"train", "eval"}
+    train = [r for r in records if r["event"] == "train"]
+    assert all({"stage", "step", "num_ts", "loss",
+                "frame_error_rate"} <= set(r) for r in train)
+    jsonl = tmp_path / "stages" / "baseline" / "metrics.jsonl"
+    assert jsonl.exists()
+    # a fresh (non-resume) rerun truncates the stage's record file instead
+    # of appending a second run's records onto the first's
+    once = len(jsonl.read_text().splitlines())
+    pipe.run()
+    assert len(jsonl.read_text().splitlines()) == once
+
+
+def test_paper_stages_shape():
+    stages = paper_stages(steps=30)
+    assert [s.name for s in stages] == ["baseline", "structured",
+                                        "unstructured", "qat4"]
+    assert stages[2].init_from == "structured"
+    assert stages[3].init_from == "unstructured"
+    assert stages[3].ccfg.weight_bits == 4
+    assert stages[0].cfg.hidden_dim == 256
+    assert stages[1].cfg.hidden_dim == 128
+
+
+def test_export_artifact_serves_pipeline_output(tmp_path):
+    """The full seam: train (tiny) -> export -> from_artifact serves with
+    the QAT stage's exact weights."""
+    pipe = _pipe(tmp_path / "run")
+    results = pipe.run()
+    final = results[-1]
+    scale = 0.05
+    path = export_artifact(final, tmp_path / "art", input_scale=scale,
+                           backend="jnp")
+    eng_mem = S.CompiledRSNN(
+        final.cfg, final.params,
+        S.EngineConfig(precision="int4", input_scale=scale),
+        final.ccfg, final.cstate)
+    eng_art = S.CompiledRSNN.from_artifact(path)
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(1, 5, final.cfg.input_dim)).astype(np.float32)
+    la, _, _ = eng_art.run(x)
+    lb, _, _ = eng_mem.run(x)
+    np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    # manifest carries the stage's measured sparsity + unified size number
+    art = artifact.load_artifact(path)
+    assert art.sparsity == final.sparsity
+    assert art.size_report["broadcast_total_bytes"] == final.size_bytes
+
+
+def test_export_artifact_rejects_unquantized_stage(tmp_path):
+    pipe = CompressionPipeline((PipelineStage("baseline", CFG),), _stream(),
+                               steps=1, batch_size=2, eval_batches=1,
+                               metric_sink=lambda r: None)
+    results = pipe.run()
+    with pytest.raises(ValueError, match="weight_bits"):
+        export_artifact(results[0], tmp_path / "a")
