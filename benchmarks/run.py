@@ -3,7 +3,8 @@
 Prints ``name,us_per_call,derived`` CSV lines (us_per_call only for the
 timed entries; analytic tables report 0).  ``--only SUBSTR`` restricts the
 run to matching entries (the CI smoke runs ``--only bench_stream_pipeline``
-to keep the pipelined-serving row honest on every push).
+to keep the pipelined-serving row honest on every push); ``--list`` prints
+the available names so ``--only`` isn't guess-and-check.
 """
 
 from __future__ import annotations
@@ -25,6 +26,7 @@ ANALYTIC = ("table1_dimensions", "fig12_model_size", "fig13_complexity",
 TIMED = (("bench_rsnn_forward", "bench_rsnn_forward"),
          ("bench_merged_spike_fc", "bench_kernels"),
          ("bench_sparse_fc", "bench_sparse_fc"),
+         ("bench_nm_fc", "bench_nm_fc"),
          ("bench_stream_engine", "bench_stream_engine"),
          ("bench_stream_sharded", "bench_stream_sharded"),
          ("bench_stream_pipeline", "bench_stream_pipeline"),
@@ -33,6 +35,15 @@ TIMED = (("bench_rsnn_forward", "bench_rsnn_forward"),
 
 def _emit(name: str, us: float, derived) -> None:
     print(f"{name},{us:.2f},{json.dumps(derived, default=str)}")
+
+
+def list_entries() -> None:
+    """Print every runnable bench name (the values ``--only`` matches)."""
+    for name in ANALYTIC:
+        print(f"{name}  [analytic]")
+    for name, _ in TIMED:
+        print(f"{name}  [timed]")
+    print("roofline_summary  [derived]")
 
 
 def main(only: str | None = None) -> None:
@@ -71,4 +82,10 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="run only entries whose name contains this substring")
-    main(ap.parse_args().only)
+    ap.add_argument("--list", action="store_true",
+                    help="print available bench names and exit")
+    args = ap.parse_args()
+    if args.list:
+        list_entries()
+    else:
+        main(args.only)

@@ -1,8 +1,8 @@
 """Stream speech through the compressed RSNN in real time.
 
   PYTHONPATH=src python examples/stream_asr.py [--precision int4] \
-      [--backend jnp|ref|pallas|sparse] [--slots 4] [--streams 8] \
-      [--sharded] [--pipeline-depth 2] \
+      [--backend jnp|ref|pallas|sparse] [--layout dense|csc|nm] \
+      [--slots 4] [--streams 8] [--sharded] [--pipeline-depth 2] \
       [--artifact DIR | --save-artifact DIR] [--frames N]
 
 Builds the paper's model (optionally packed to the pruned/int4 deployment
@@ -19,6 +19,14 @@ manifest, and the logits are bit-identical to serving the same model
 packed in-process.  ``--save-artifact DIR`` writes the in-process model
 out as such an artifact instead.  ``--frames N`` truncates every utterance
 to N frames (the CI smoke serves 3 frames from a pipeline-built artifact).
+
+``--layout`` picks the packed-weight recipe (docs/layouts.md): ``csc``
+(default) is the paper's 40% unstructured FC pruning stored as padded
+CSC; ``nm`` prunes the FC 2:4 and packs it into the group-packed N:M
+layout (no index padding), serving the readout through the layout's
+zero-skip path; ``dense`` skips pruning entirely (int4 only).  With
+``--save-artifact`` the layout choice lands in the manifest, so
+``--artifact`` serves the same path back.
 
 ``--sharded`` serves the same queue through serving/sharded.py instead:
 the slot batch and recurrent state shard over every local device (set
@@ -66,6 +74,13 @@ def main():
                          "artifact's preferred backend)")
     ap.add_argument("--precision", default="int4", choices=["float", "int4"],
                     help="ignored with --artifact (manifest decides)")
+    ap.add_argument("--layout", default="csc",
+                    choices=["dense", "csc", "nm"],
+                    help="packed-weight recipe: csc = 40%% unstructured FC "
+                         "pruning in padded CSC (paper), nm = 2:4 FC "
+                         "pruning in the group-packed N:M layout served "
+                         "zero-skip, dense = no pruning; ignored with "
+                         "--artifact (manifest decides)")
     ap.add_argument("--hidden", type=int, default=128,
                     help="paper's pruned width; ignored with --artifact")
     ap.add_argument("--slots", type=int, default=4)
@@ -101,7 +116,17 @@ def main():
     else:
         cfg = RSNNConfig(hidden_dim=args.hidden)
         params = rsnn.init_params(jax.random.PRNGKey(0), cfg)
-        ccfg = CompressionConfig(fc_prune_frac=0.4, weight_bits=4)
+        if args.layout == "dense":
+            ccfg = CompressionConfig(weight_bits=4)
+        elif args.layout == "nm":
+            from repro.core.compression.compress import PruneSpec
+            ccfg = CompressionConfig(weight_bits=4, prune_specs=(
+                ("fc_w", PruneSpec(kind="nm", n=2, m=4)),))
+        else:
+            ccfg = CompressionConfig(fc_prune_frac=0.4, weight_bits=4)
+        # the nm layout is there to be *executed*: route the readout
+        # through the packed layout's zero-skip path (int4 only)
+        sparse_fc = args.layout == "nm" and args.precision == "int4"
         cstate = init_compression(params, ccfg)
 
     data = TimitLikeStream(SpeechDataConfig())
@@ -120,7 +145,8 @@ def main():
         engine = CompiledRSNN(
             cfg, params,
             EngineConfig(backend=args.backend or "jnp",
-                         precision=args.precision, input_scale=scale),
+                         precision=args.precision, sparse_fc=sparse_fc,
+                         input_scale=scale),
             ccfg=ccfg, cstate=cstate)
         if args.save_artifact:
             from repro.core import artifact as artifact_lib
@@ -128,7 +154,7 @@ def main():
                 artifact_lib.save_artifact(
                     args.save_artifact, cfg=cfg, packed=engine.packed,
                     ccfg=ccfg, input_scale=scale,
-                    backend=args.backend or "jnp")
+                    backend=args.backend or "jnp", sparse_fc=sparse_fc)
             else:
                 artifact_lib.save_artifact(
                     args.save_artifact, cfg=cfg, params=params,
@@ -147,9 +173,12 @@ def main():
 
     if engine.packed is not None:
         rep = sparse.packed_size_report(engine.packed)
+        tags = ", ".join(f"{n}={v['layout']}" for n, v in rep.items()
+                         if isinstance(v, dict) and "layout" in v)
         print(f"packed model: {rep['broadcast_total_bytes'] / 1e6:.3f} MB "
               f"nonzero int4 (paper Fig. 12: 0.10 MB); "
-              f"{rep['total_bytes'] / 1e6:.3f} MB dense/CSC layout")
+              f"{rep['total_bytes'] / 1e6:.3f} MB packed layout "
+              f"({tags or 'all dense'})")
 
     if args.sharded:
         max_frames = max(len(u) for u in utts)

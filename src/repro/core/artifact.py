@@ -12,17 +12,21 @@ that contract.  An artifact is a directory
       tensors.npz     — every deployed array, verbatim
 
 holding either the **int4** payload (the ``PackedRSNN`` pytree: nibble-
-packed ``QuantTensor``s, padded-CSC ``SparseColumns`` for every pruned
+packed ``QuantTensor``s, a layout-resolved sparse tensor for every pruned
 weight, inference LIF constants) or the **float** payload (the raw
 parameter tree).  Arrays round-trip bit-exactly through ``.npz``, so
 ``CompiledRSNN.from_artifact(path)`` produces logits bit-identical to
 serving the same model packed in-process (tests/test_artifact.py proves
 this on float/int4, single-device and sharded).
 
-``SCHEMA_VERSION`` gates compatibility: a reader rejects any manifest
-whose version it does not understand (``ArtifactError``), instead of
-mis-deserializing tensors.  EdgeDRNN (arXiv:1912.12193) and Nimbekar et
-al. (arXiv:2410.16298) treat the compressed artifact as the deployment
+Schema v2 (this writer): each sparse tensor is serialized by its
+``core/layouts`` ``WeightLayout`` (tensor keys are ``<layout>.<name>.*``
+and the manifest records the per-tensor layout tag under ``layouts``), so
+a new layout ships without a reader edit.  Schema v1 artifacts (PR 4) are
+still read: their ``csc.*`` keys load as the implicit padded-CSC/dense
+layouts.  A reader rejects any other version (``ArtifactError``) instead
+of mis-deserializing tensors.  EdgeDRNN (arXiv:1912.12193) and Nimbekar
+et al. (arXiv:2410.16298) treat the compressed artifact as the deployment
 interface; here it is additionally self-describing.
 """
 
@@ -37,12 +41,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import rsnn, sparse
+from repro.core import layouts, rsnn, sparse
 from repro.core.compression.compress import CompressionConfig, PruneSpec
 from repro.core.complexity import SparsityProfile
 from repro.core.rsnn import RSNNConfig
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
+SUPPORTED_VERSIONS = (1, 2)
 MANIFEST = "manifest.json"
 TENSORS = "tensors.npz"
 
@@ -69,6 +74,24 @@ class RSNNArtifact(NamedTuple):
     @property
     def backend(self) -> str | None:
         return self.manifest.get("backend")
+
+    @property
+    def sparse_fc(self) -> bool:
+        """Whether the model prefers the zero-skip layout FC path
+        (absent in v1 manifests -> False)."""
+        return bool(self.manifest.get("sparse_fc", False))
+
+    @property
+    def layouts(self) -> dict:
+        """Per-tensor layout tags (v1 manifests: implicit CSC)."""
+        if "layouts" in self.manifest:
+            return self.manifest["layouts"]
+        if self.packed is None:
+            return {}
+        from repro.core import layouts as layouts_lib
+
+        return {n: layouts_lib.layout_of(t).name
+                for n, t in self.packed.sparse.items()}
 
     @property
     def size_report(self) -> dict | None:
@@ -124,39 +147,49 @@ def _decode_sparsity(d: dict | None) -> SparsityProfile | None:
 # ------------------------------------------------------------ tensor codecs
 
 
-def _flatten_packed(packed: sparse.PackedRSNN) -> dict[str, np.ndarray]:
+def _flatten_packed(packed: sparse.PackedRSNN
+                    ) -> tuple[dict[str, np.ndarray], dict[str, str]]:
+    """Flatten to named arrays; returns (arrays, per-tensor layout tags).
+
+    Sparse tensors serialize through their layout's codec under
+    ``<layout>.<name>.<field>`` keys (v1 wrote the same shape for CSC, so
+    the v1/v2 readers share this inverse)."""
     flat: dict[str, np.ndarray] = {}
+    tags: dict[str, str] = {}
     for name, qt in packed.quant.items():
         flat[f"quant.{name}.packed"] = np.asarray(qt.packed)
         flat[f"quant.{name}.scale"] = np.asarray(qt.scale)
-    for name, sc in packed.sparse.items():
-        flat[f"csc.{name}.indices"] = np.asarray(sc.indices)
-        flat[f"csc.{name}.values"] = np.asarray(sc.values)
-        flat[f"csc.{name}.scale"] = np.asarray(sc.scale)
-        if sc.count is not None:
-            flat[f"csc.{name}.count"] = np.asarray(sc.count)
+    for name, t in packed.sparse.items():
+        layout = layouts.layout_of(t)
+        tags[name] = layout.name
+        for field, arr in layout.flatten(t).items():
+            flat[f"{layout.name}.{name}.{field}"] = arr
     for name, arr in packed.lif.items():
         flat[f"lif.{name}"] = np.asarray(arr)
-    return flat
+    return flat, tags
 
 
 def _unflatten_packed(data) -> sparse.PackedRSNN:
     quant: dict[str, dict] = {}
-    csc: dict[str, dict] = {}
+    sparse_fields: dict[str, dict] = {}
+    sparse_tags: dict[str, str] = {}
     lif: dict[str, jax.Array] = {}
+    known = set(layouts.available_layouts())
     for key in data.files:
         kind, _, rest = key.partition(".")
         if kind == "quant":
             name, field = rest.rsplit(".", 1)
             quant.setdefault(name, {})[field] = jnp.asarray(data[key])
-        elif kind == "csc":
-            name, field = rest.rsplit(".", 1)
-            csc.setdefault(name, {})[field] = jnp.asarray(data[key])
         elif kind == "lif":
             lif[rest] = jnp.asarray(data[key])
+        elif kind in known:
+            name, field = rest.rsplit(".", 1)
+            sparse_tags[name] = kind
+            sparse_fields.setdefault(name, {})[field] = jnp.asarray(data[key])
     return sparse.PackedRSNN(
         quant={n: sparse.QuantTensor(**f) for n, f in quant.items()},
-        sparse={n: sparse.SparseColumns(**f) for n, f in csc.items()},
+        sparse={n: layouts.get_layout(sparse_tags[n]).unflatten(f)
+                for n, f in sparse_fields.items()},
         lif=lif)
 
 
@@ -192,26 +225,33 @@ def save_artifact(path: str | Path, *, cfg: RSNNConfig,
                   params: dict | None = None,
                   ccfg: CompressionConfig | None = None,
                   sparsity: SparsityProfile | None = None,
-                  input_scale=None, backend: str | None = None) -> Path:
+                  input_scale=None, backend: str | None = None,
+                  sparse_fc: bool = False) -> Path:
     """Write a deployment artifact directory; returns its path.
 
     Exactly one of ``packed`` (int4 payload) / ``params`` (float payload)
     must be given.  ``input_scale`` is the static 8-bit input calibration
     the engine serves with (hardware has no per-chunk calibration, so it
     belongs to the deployed model); ``backend`` names the preferred entry
-    of ``serving/backends.py``.
+    of ``serving/backends.py``; ``sparse_fc=True`` records that the model
+    should serve its pruned FC through the packed layout's zero-skip path
+    (``EngineConfig.sparse_fc`` — ``from_artifact`` honors it).
     """
     if (packed is None) == (params is None):
         raise ValueError("save_artifact needs exactly one of packed/params")
     if packed is not None and (ccfg is None or ccfg.quant_spec is None):
         raise ValueError("an int4 artifact needs the CompressionConfig it "
                          "was packed with (weight_bits set)")
+    if sparse_fc and (packed is None or "fc_w" not in packed.sparse):
+        raise ValueError("sparse_fc=True needs an int4 payload with a "
+                         "pruned fc_w (a packed sparse layout to serve)")
     path = Path(path)
     path.mkdir(parents=True, exist_ok=True)
 
+    layout_tags: dict[str, str] = {}
     if packed is not None:
         precision = "int4"
-        flat = _flatten_packed(packed)
+        flat, layout_tags = _flatten_packed(packed)
         size_report = sparse.packed_size_report(packed)
     else:
         precision = "float"
@@ -228,6 +268,8 @@ def save_artifact(path: str | Path, *, cfg: RSNNConfig,
         "sparsity_profile": _encode_sparsity(sparsity),
         "size_report": size_report,
         "backend": backend,
+        "sparse_fc": sparse_fc,
+        "layouts": layout_tags,
         "has_input_scale": input_scale is not None,
         "tensors": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
                     for k, v in flat.items()},
@@ -251,10 +293,12 @@ def load_artifact(path: str | Path) -> RSNNArtifact:
         raise ArtifactError(f"no artifact at {path} (missing {MANIFEST})")
     manifest = json.loads(mf.read_text())
     version = manifest.get("schema_version")
-    if version != SCHEMA_VERSION:
+    if version not in SUPPORTED_VERSIONS:
         raise ArtifactError(
-            f"artifact schema version {version!r} is not supported by this "
-            f"reader (wants {SCHEMA_VERSION}); re-export the artifact")
+            f"artifact at {path} has schema version {version!r}; this "
+            f"reader supports versions {SUPPORTED_VERSIONS} "
+            f"(current writer: {SCHEMA_VERSION}). Re-export the artifact "
+            f"with a matching writer or upgrade this reader")
     data = np.load(path / TENSORS)
     declared = manifest.get("tensors", {})
     missing = sorted(set(declared) - set(data.files))
@@ -275,6 +319,14 @@ def load_artifact(path: str | Path) -> RSNNArtifact:
     packed = params = None
     if manifest["precision"] == "int4":
         packed = _unflatten_packed(data)
+        declared_tags = manifest.get("layouts")
+        if declared_tags is not None:  # v2: manifest tags must match payload
+            actual = {n: layouts.layout_of(t).name
+                      for n, t in packed.sparse.items()}
+            if actual != declared_tags:
+                raise ArtifactError(
+                    f"manifest layout tags {declared_tags} disagree with "
+                    f"the tensor payload {actual}")
     elif manifest["precision"] == "float":
         params = _unflatten_params(data, cfg)
     else:

@@ -26,12 +26,20 @@ class PruneSpec:
     (structured: whole input rows / output channels by L2 norm).
     ``frac`` is the pruned fraction (ignored by ``nm``, which keeps
     ``n`` of every ``m`` consecutive rows).
+
+    ``layout`` names the deployment storage layout the masked tensor packs
+    to (``core/layouts`` registry): ``"auto"`` resolves to the group-packed
+    ``nm_group`` layout for N:M specs (fixed nnz per group, no index
+    padding) and padded ``csc`` otherwise; an explicit tag forces one —
+    e.g. ``layout="csc"`` keeps an N:M mask in the generic CSC layout for
+    bit-parity comparisons.
     """
 
     kind: str = "magnitude"
     frac: float = 0.0
     n: int = 2
     m: int = 4
+    layout: str = "auto"
 
     def __post_init__(self):
         if self.kind not in ("magnitude", "nm", "row", "channel"):
@@ -41,6 +49,30 @@ class PruneSpec:
         if self.kind == "nm" and not 1 <= self.n <= self.m:
             raise ValueError(
                 f"N:M spec needs 1 <= n <= m, got n={self.n} m={self.m}")
+        if self.layout != "auto":
+            from repro.core import layouts  # deferred: layouts is above us
+
+            if self.layout not in layouts.available_layouts():
+                raise ValueError(
+                    f"unknown weight layout {self.layout!r}; available: "
+                    f"{('auto',) + layouts.available_layouts()}")
+            if self.layout == "dense":
+                raise ValueError(
+                    "layout 'dense' stores every entry and would break the "
+                    "mask-survivor size accounting; a masked tensor needs a "
+                    "sparse layout (drop the spec to keep the tensor dense)")
+            if self.layout == "nm_group":
+                if self.kind != "nm":
+                    raise ValueError(
+                        "layout 'nm_group' stores fixed-nnz groups and "
+                        "needs an N:M spec (kind='nm'); got "
+                        f"kind={self.kind!r}")
+                if self.m > 16:
+                    # fail at config time, not hours later at pack time
+                    raise ValueError(
+                        "layout 'nm_group' packs the in-group offset into "
+                        f"a nibble, so m <= 16 is required; got m={self.m} "
+                        "(use layout='csc' or 'auto')")
 
     @property
     def is_noop(self) -> bool:

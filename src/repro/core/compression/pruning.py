@@ -63,15 +63,23 @@ def sparsity_of(masks: dict) -> dict:
 def nm_prune_mask(w: jax.Array, n: int = 2, m: int = 4) -> jax.Array:
     """N:M structured-sparse mask along the input dim (beyond-paper option;
     TPU/accelerator-friendly regular sparsity). Keeps the n largest-|w| of
-    every m consecutive rows."""
+    every m consecutive rows.
+
+    A width not divisible by ``m`` leaves a tail group of ``r < m`` rows:
+    it keeps its ``min(n, r)`` largest-|w| rows — the same top-n rule, never
+    over-pruned below it (the tail is padded with ``-inf`` sentinels for
+    the ranking, which can never outrank a real weight)."""
     rows, cols = w.shape
-    if rows % m:
-        raise ValueError(f"rows {rows} not divisible by m={m}")
-    g = jnp.abs(w).reshape(rows // m, m, cols)
+    padded = -(-rows // m) * m  # ceil to a whole number of groups
+    a = jnp.abs(w)
+    if padded != rows:
+        pad = jnp.full((padded - rows, cols), -jnp.inf, a.dtype)
+        a = jnp.concatenate([a, pad], axis=0)
+    g = a.reshape(padded // m, m, cols)
     # rank within each group of m; keep top-n
     order = jnp.argsort(jnp.argsort(-g, axis=1), axis=1)
     mask = (order < n).astype(w.dtype)
-    return mask.reshape(rows, cols)
+    return mask.reshape(padded, cols)[:rows]
 
 
 def _norm_keep(norms: jax.Array, prune_frac: float) -> jax.Array:

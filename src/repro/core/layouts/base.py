@@ -1,0 +1,145 @@
+"""The ``WeightLayout`` interface and registry.
+
+A *weight layout* is how one packed 2-D weight is stored and executed at
+deployment: the paper's accelerator gets its 96.42% size reduction from
+mixed-level pruning whose hardware payoff depends entirely on the storage
+layout the zero-skip engine reads (EdgeDRNN and Chipmunk make the same
+point for low-power RNN inference — the sparse-weight layout *is* the
+co-design lever).  Before this package, the layout choice was hard-coded
+in three places (``core/sparse.py``, ``serving/backends.py``,
+``core/artifact.py``); now each layout is one object owning every
+layout-specific decision:
+
+  * ``pack`` / ``unpack``        — build the packed tensor from integer
+    weights (+ pruning mask), and dequantize it back to dense float;
+  * ``matmul`` / ``fc_oracle``   — the jnp execution oracles (bit-exact
+    ground truth for the fused kernels);
+  * ``fc_kernel``                — the fused Pallas binding for the
+    merged-spike readout;
+  * ``size_bytes`` / ``stored_entries`` — the layout's contribution to
+    ``packed_size_report`` (Fig. 12 accounting);
+  * ``flatten`` / ``unflatten``  — the on-disk tensor codec used by
+    ``core/artifact.py`` (the manifest records each tensor's layout tag).
+
+Layouts register by name; ``layout_of`` maps a packed tensor back to its
+layout by type, so the serving op table (``serving/backends.py``) resolves
+the readout from whatever ``pack_model`` produced — a new layout plugs in
+without touching the engine, the packer's call sites, or the artifact
+reader.
+"""
+
+from __future__ import annotations
+
+import abc
+
+import jax
+import numpy as np
+
+
+class WeightLayout(abc.ABC):
+    """One packed-weight storage format, end to end.
+
+    Subclasses set ``name`` (the registry/manifest tag) and
+    ``tensor_type`` (the pytree type ``pack`` returns; ``layout_of``
+    dispatches on it) and implement the methods below.  Layouts are
+    stateless singletons — all per-tensor data lives in the packed tensor.
+    """
+
+    name: str
+    tensor_type: type
+
+    # ------------------------------------------------------------- packing
+
+    @abc.abstractmethod
+    def pack(self, q: jax.Array, scale: jax.Array, *, keep=None, spec=None):
+        """Pack an int-quantized matrix ``q`` (K, N) with per-channel
+        ``scale`` into this layout's tensor.  ``keep`` is the pruning mask
+        deciding which entries are *stored* (the paper's accounting:
+        storage follows the pruning decision even when a kept weight
+        quantizes to 0); ``spec`` is the tensor's ``PruneSpec`` for
+        layouts whose structure depends on it (e.g. N:M group shape)."""
+
+    @abc.abstractmethod
+    def unpack(self, t, k_rows: int) -> jax.Array:
+        """Dequantize back to the dense (k_rows, N) float32 matrix."""
+
+    # ----------------------------------------------------------- execution
+
+    @abc.abstractmethod
+    def matmul(self, x: jax.Array, t) -> jax.Array:
+        """jnp oracle: ``x`` (B, K) @ packed -> (B, N) float32."""
+
+    def fc_oracle(self, spikes_ts: jax.Array, t) -> jax.Array:
+        """Merged-spike readout oracle: sum the (TS, B, H) spike trains
+        over TS, then one layout matmul (paper §II-D2)."""
+        merged = spikes_ts.sum(axis=0) if spikes_ts.ndim == 3 else spikes_ts
+        return self.matmul(merged, t)
+
+    @abc.abstractmethod
+    def fc_kernel(self, spikes_ts: jax.Array, t) -> jax.Array:
+        """Fused Pallas merged-spike readout (interpret mode on CPU)."""
+
+    # ------------------------------------------------------ size accounting
+
+    @abc.abstractmethod
+    def stored_entries(self, t) -> float:
+        """Entries the pruning decision stores (mask survivors) — the
+        Fig. 12 broadcast accounting, independent of index overhead."""
+
+    @abc.abstractmethod
+    def size_bytes(self, t, k_rows: int, bits: int = 4) -> float:
+        """Deployed bytes of this layout including its index overhead."""
+
+    # ------------------------------------------------------- artifact codec
+
+    @abc.abstractmethod
+    def flatten(self, t) -> dict[str, np.ndarray]:
+        """Tensor -> named arrays for ``tensors.npz`` (static fields go
+        into small arrays; the inverse of ``unflatten``)."""
+
+    @abc.abstractmethod
+    def unflatten(self, fields: dict[str, jax.Array]):
+        """Named arrays (as loaded from disk) -> the packed tensor."""
+
+
+# ------------------------------------------------------------------ registry
+
+
+_REGISTRY: dict[str, WeightLayout] = {}
+
+
+def register_layout(layout: WeightLayout) -> WeightLayout:
+    """Register a layout instance under ``layout.name`` (idempotent for
+    the same instance; a different instance under a taken name is an
+    error — artifacts key tensors on these tags)."""
+    existing = _REGISTRY.get(layout.name)
+    if existing is not None and existing is not layout:
+        raise ValueError(f"layout name {layout.name!r} is already "
+                         f"registered by {type(existing).__name__}")
+    _REGISTRY[layout.name] = layout
+    return layout
+
+
+def unregister_layout(name: str) -> None:
+    """Remove a registered layout (for test-local plugins)."""
+    _REGISTRY.pop(name, None)
+
+
+def available_layouts() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_layout(name: str) -> WeightLayout:
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown weight layout {name!r}; "
+                         f"available: {available_layouts()}")
+    return _REGISTRY[name]
+
+
+def layout_of(t) -> WeightLayout:
+    """The layout that owns packed tensor ``t`` (dispatch by type)."""
+    for layout in _REGISTRY.values():
+        if isinstance(t, layout.tensor_type):
+            return layout
+    raise TypeError(f"no registered weight layout packs {type(t).__name__}; "
+                    f"available: {available_layouts()}")

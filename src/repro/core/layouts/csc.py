@@ -1,0 +1,142 @@
+"""Padded-CSC layout: zero-skipping storage for *unstructured* sparsity.
+
+For every output channel the surviving row indices and int4 values, padded
+to the densest column — the software analogue of the accelerator skipping
+pruned weights.  Index cost is ``ceil(log2 K)`` bits per stored entry plus
+the padding to ``nnz_max``; regular (N:M) sparsity can do strictly better
+(see ``layouts/nm.py``), which is why the layout is pluggable.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.layouts import base
+
+
+class SparseColumns(NamedTuple):
+    """Padded column-compressed sparse int4 matrix (zero-skipping layout).
+
+    ``indices[i, n]`` is the row of the i-th surviving weight of output
+    channel ``n``; ``values[i, n]`` its integer (int4) value held in float32.
+    Columns shorter than the densest one are padded with (index 0, value 0),
+    so padded entries contribute nothing and no mask is needed.
+
+    ``count[n]`` is the number of *stored* entries of column ``n`` — the
+    pruning decision, which can exceed the nonzero count when a kept weight
+    quantizes to 0.  It exists for exact size accounting
+    (``packed_size_report`` vs ``compression.compressed_size_bytes``) and
+    is ``None`` for layouts built without a mask (kernel oracles).
+    """
+
+    indices: jax.Array  # (nnz_max, N) int32
+    values: jax.Array  # (nnz_max, N) float32, integer-valued in [-8, 7]
+    scale: jax.Array  # (1, N) float32
+    count: jax.Array | None = None  # (N,) int32 stored entries per column
+
+
+def sparsify_columns(q: jax.Array, scale: jax.Array,
+                     keep: jax.Array | None = None) -> SparseColumns:
+    """Build the padded-CSC view of an int-quantized matrix (host-side).
+
+    q: (K, N) integer-valued.  ``keep`` is the pruning mask deciding which
+    entries are *stored* (the paper's accounting: storage follows the
+    pruning decision, even when a kept weight quantizes to 0 — those carry
+    value 0 and contribute nothing to the matmul).  ``keep=None`` stores
+    the nonzeros of ``q`` (mask-free oracle layouts).
+    """
+    qn = np.asarray(q)
+    kp = (qn != 0) if keep is None else np.asarray(keep).astype(bool)
+    nnz_max = max(int(kp.sum(axis=0).max()), 1)
+    # stable argsort on "is dropped": kept rows first, original row order kept
+    order = np.argsort(~kp, axis=0, kind="stable")[:nnz_max]
+    taken = np.take_along_axis(kp, order, axis=0)
+    vals = np.where(taken, np.take_along_axis(qn, order, axis=0), 0)
+    idx = np.where(taken, order, 0)
+    return SparseColumns(
+        indices=jnp.asarray(idx, jnp.int32),
+        values=jnp.asarray(vals, jnp.float32),
+        scale=jnp.asarray(scale, jnp.float32).reshape(1, -1),
+        count=jnp.asarray(kp.sum(axis=0), jnp.int32),
+    )
+
+
+def sparse_matmul(x: jax.Array, sc: SparseColumns) -> jax.Array:
+    """Zero-skipping matmul: x (B, K) @ CSC -> (B, N) float32.
+
+    Only the surviving rows of each output channel are gathered and
+    accumulated — work scales with nnz, not K*N (the paper's skipped
+    accumulates).  Accumulation order differs from the dense matmul, so
+    results agree to float tolerance, not bitwise.
+    """
+    xg = x.astype(jnp.float32)[:, sc.indices]  # (B, nnz_max, N)
+    acc = (xg * sc.values).sum(axis=1)
+    return acc * sc.scale
+
+
+def csc_stored_entries(sc: SparseColumns) -> float:
+    """Stored entries of a CSC layout: the mask-kept count when available
+    (exact Fig. 12 accounting), else the measured nonzeros."""
+    if sc.count is not None:
+        return float(np.asarray(sc.count).sum())
+    return float((np.asarray(sc.values) != 0).sum())
+
+
+def csc_size_bytes(sc: SparseColumns, k_rows: int, bits: int = 4) -> float:
+    """CSC storage: value nibbles + ceil(log2 K)-bit row indices per entry."""
+    index_bits = max(int(np.ceil(np.log2(max(k_rows, 2)))), 1)
+    return csc_stored_entries(sc) * (bits + index_bits) / 8.0
+
+
+class SparseColumnsLayout(base.WeightLayout):
+    """Padded CSC over any unstructured pruning mask."""
+
+    name = "csc"
+    tensor_type = SparseColumns
+
+    def pack(self, q, scale, *, keep=None, spec=None) -> SparseColumns:
+        return sparsify_columns(q, scale, keep=keep)
+
+    def unpack(self, t: SparseColumns, k_rows: int) -> jax.Array:
+        n = t.indices.shape[1]
+        dense = np.zeros((k_rows, n), np.float32)
+        idx = np.asarray(t.indices)
+        vals = np.asarray(t.values)
+        # scatter-add: padded entries carry value 0, so a pad slot landing
+        # on a stored row (index 0) contributes nothing
+        np.add.at(dense, (idx, np.broadcast_to(np.arange(n), idx.shape)),
+                  vals)
+        return jnp.asarray(dense * np.asarray(t.scale))
+
+    def matmul(self, x, t: SparseColumns) -> jax.Array:
+        return sparse_matmul(x, t)
+
+    def fc_kernel(self, spikes_ts, t: SparseColumns) -> jax.Array:
+        from repro.kernels import ops  # deferred: kernels import at use time
+
+        return ops.sparse_fc(spikes_ts, t.indices, t.values, t.scale)
+
+    def stored_entries(self, t: SparseColumns) -> float:
+        return csc_stored_entries(t)
+
+    def size_bytes(self, t: SparseColumns, k_rows: int,
+                   bits: int = 4) -> float:
+        return csc_size_bytes(t, k_rows, bits)
+
+    def flatten(self, t: SparseColumns) -> dict[str, np.ndarray]:
+        flat = {"indices": np.asarray(t.indices),
+                "values": np.asarray(t.values),
+                "scale": np.asarray(t.scale)}
+        if t.count is not None:
+            flat["count"] = np.asarray(t.count)
+        return flat
+
+    def unflatten(self, fields) -> SparseColumns:
+        return SparseColumns(**fields)
+
+
+CSC = base.register_layout(SparseColumnsLayout())

@@ -1,0 +1,69 @@
+"""Dense int4 layout: nibble-packed weights + per-channel scales.
+
+The paper's baseline storage (Fig. 12): every weight at 4 bits, zero index
+overhead — the accelerator zero-skips by *input broadcasting*, not by
+compressed weight storage.  This is the layout ``kernels/int4_matmul.py``
+and ``kernels/merged_spike_fc.py`` read directly.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compression.quantization import pack_int4, unpack_int4
+from repro.core.layouts import base
+
+
+class QuantTensor(NamedTuple):
+    """Nibble-packed int4 weight matrix with per-output-channel scales."""
+
+    packed: jax.Array  # (K//2, N) int8: low nibble = even row
+    scale: jax.Array  # (1, N) float32
+
+
+def dequantize(qt: QuantTensor) -> jax.Array:
+    """(K, N) float32 dense weights; bit-exact with QAT fake-quant."""
+    return unpack_int4(qt.packed).astype(jnp.float32) * qt.scale
+
+
+class DenseInt4Layout(base.WeightLayout):
+    """Dense nibble-packed int4 (no sparsity exploited in storage)."""
+
+    name = "dense"
+    tensor_type = QuantTensor
+
+    def pack(self, q, scale, *, keep=None, spec=None) -> QuantTensor:
+        # ``keep`` was already applied to q by the caller's masking; dense
+        # storage keeps the zeros in place.
+        return QuantTensor(packed=pack_int4(q),
+                           scale=jnp.asarray(scale).reshape(1, -1))
+
+    def unpack(self, t: QuantTensor, k_rows: int) -> jax.Array:
+        return dequantize(t)
+
+    def matmul(self, x, t: QuantTensor) -> jax.Array:
+        return x.astype(jnp.float32) @ dequantize(t)
+
+    def fc_kernel(self, spikes_ts, t: QuantTensor) -> jax.Array:
+        from repro.kernels import ops  # deferred: kernels import at use time
+
+        return ops.merged_spike_fc(spikes_ts, t.packed, t.scale.reshape(-1))
+
+    def stored_entries(self, t: QuantTensor) -> float:
+        return float(t.packed.shape[0] * 2 * t.packed.shape[1])
+
+    def size_bytes(self, t: QuantTensor, k_rows: int, bits: int = 4) -> float:
+        return k_rows * t.packed.shape[1] * bits / 8.0
+
+    def flatten(self, t: QuantTensor) -> dict[str, np.ndarray]:
+        return {"packed": np.asarray(t.packed), "scale": np.asarray(t.scale)}
+
+    def unflatten(self, fields) -> QuantTensor:
+        return QuantTensor(**fields)
+
+
+DENSE = base.register_layout(DenseInt4Layout())

@@ -1,0 +1,199 @@
+"""Group-packed N:M layout: fixed ``n`` nonzeros per ``m``-group, no index
+padding.
+
+The payoff of N:M (semi-structured) pruning over unstructured pruning is
+exactly that the sparsity is *regular*: every group of ``m`` consecutive
+input rows keeps ``n`` survivors, so the storage needs no per-entry global
+row index and no padding to the densest column — entry ``e`` of a column
+belongs to group ``e // n`` and only its ``ceil(log2 m)``-bit in-group
+offset must be stored.  Packed CSC pays ``ceil(log2 K)`` bits per index
+plus padding; at equal nnz this layout is strictly smaller whenever
+``m < K`` (asserted in tests and reported by ``bench_nm_fc``).
+
+Storage is one int8 byte per entry slot: the int4 value in the low nibble
+and the in-group row offset in the high nibble (hence ``m <= 16``) — the
+index rides the same byte stream as the weight, the software analogue of
+the accelerator fetching weight+offset in one access.
+
+A tail group (``K % m != 0``) may keep fewer than ``n`` rows; its missing
+slots are padded with (offset 0, value 0), which contribute nothing to the
+matmul.  ``count`` records the true mask survivors for exact Fig. 12
+accounting.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.layouts import base
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class NMGroupPacked:
+    """Group-packed N:M sparse int4 matrix.
+
+    ``packed[e, c]`` holds entry ``e`` of output channel ``c``: int4 value
+    in the low nibble, in-group row offset in the high nibble.  Entry ``e``
+    belongs to row group ``e // n``, so its global row is
+    ``(e // n) * m + offset``.  Entries are stored in ascending row order
+    (groups ascending, offsets ascending within a group) — the same order
+    padded CSC stores the same mask's survivors, which is what makes the
+    two layouts bit-identical to execute.
+
+    ``n``/``m``/``rows`` are static pytree aux data (they shape the kernel
+    grid), so ``jax.device_put``/``jit`` only ever touch the arrays.
+    """
+
+    packed: jax.Array  # (ceil(rows/m) * n, N) int8: value | offset << 4
+    scale: jax.Array  # (1, N) float32
+    count: jax.Array  # (N,) int32 mask survivors per column
+    n: int
+    m: int
+    rows: int  # original K (m need not divide it)
+
+    def tree_flatten(self):
+        return (self.packed, self.scale, self.count), (self.n, self.m,
+                                                       self.rows)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+
+def nm_index_bits(m: int) -> int:
+    """Bits per stored in-group offset."""
+    return max(int(np.ceil(np.log2(max(m, 2)))), 1)
+
+
+def split_nibbles(packed: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(E, N) int8 -> (int4 values as float32, in-group offsets as int32)."""
+    val = (packed & 0xF).astype(jnp.int8)
+    val = jnp.where(val >= 8, val - 16, val).astype(jnp.float32)
+    off = ((packed >> 4) & 0xF).astype(jnp.int32)
+    return val, off
+
+
+def nm_matmul(x: jax.Array, t: NMGroupPacked) -> jax.Array:
+    """Zero-skip matmul: x (B, K) @ N:M-group-packed -> (B, N) float32.
+
+    Mirrors ``csc.sparse_matmul``'s operation order (gather, multiply,
+    sum over the entry axis, scale) so that the same mask packed either
+    way produces bit-identical results.
+    """
+    val, off = split_nibbles(t.packed)
+    e = t.packed.shape[0]
+    group = jnp.arange(e, dtype=jnp.int32) // t.n
+    idx = group[:, None] * t.m + off  # (E, N) global rows
+    xg = x.astype(jnp.float32)[:, idx]  # (B, E, N)
+    acc = (xg * val).sum(axis=1)
+    return acc * t.scale
+
+
+def pack_nm_groups(q: jax.Array, scale: jax.Array, keep: jax.Array,
+                   n: int, m: int) -> NMGroupPacked:
+    """Pack an int-quantized matrix whose mask is N:M-regular (host-side).
+
+    ``keep`` must store at most ``n`` entries per ``m``-row group in every
+    column (what ``pruning.nm_prune_mask`` guarantees); a tail group may
+    store fewer and is padded with zero-value slots.
+    """
+    if not 1 <= n <= m:
+        raise ValueError(f"N:M layout needs 1 <= n <= m, got n={n} m={m}")
+    if m > 16:
+        raise ValueError(
+            f"N:M group layout packs the in-group offset into a nibble, "
+            f"so m <= 16 is required; got m={m} (use the 'csc' layout)")
+    qn = np.asarray(q)
+    kp = np.asarray(keep).astype(bool)
+    rows, cols = qn.shape
+    groups = -(-rows // m)
+    pad_rows = groups * m - rows
+    if pad_rows:
+        qn = np.concatenate([qn, np.zeros((pad_rows, cols), qn.dtype)])
+        kp = np.concatenate([kp, np.zeros((pad_rows, cols), bool)])
+    qg = qn.reshape(groups, m, cols)
+    kg = kp.reshape(groups, m, cols)
+    per_group = kg.sum(axis=1)
+    if per_group.max(initial=0) > n:
+        bad = int(per_group.argmax() // cols)
+        raise ValueError(
+            f"mask is not {n}:{m}-regular: a group stores "
+            f"{int(per_group.max())} > n={n} entries (group {bad}); "
+            f"pack it with the 'csc' layout instead")
+    # kept offsets first (ascending), then pad slots — stable over row order
+    order = np.argsort(~kg, axis=1, kind="stable")[:, :n]  # (G, n, cols)
+    taken = np.take_along_axis(kg, order, axis=1)
+    vals = np.where(taken, np.take_along_axis(qg, order, axis=1), 0)
+    offs = np.where(taken, order, 0)
+    byte = (vals.astype(np.int64) & 0xF) | ((offs.astype(np.int64) & 0xF) << 4)
+    return NMGroupPacked(
+        packed=jnp.asarray(byte.reshape(groups * n, cols).astype(np.int8)),
+        scale=jnp.asarray(scale, jnp.float32).reshape(1, -1),
+        count=jnp.asarray(np.asarray(keep).astype(bool).sum(axis=0),
+                          jnp.int32),
+        n=n, m=m, rows=rows)
+
+
+class NMGroupPackedLayout(base.WeightLayout):
+    """Fixed-nnz-per-group storage for N:M prune specs."""
+
+    name = "nm_group"
+    tensor_type = NMGroupPacked
+
+    def pack(self, q, scale, *, keep=None, spec=None) -> NMGroupPacked:
+        if keep is None:
+            raise ValueError("the N:M group layout packs a pruning mask; "
+                             "keep= is required")
+        if spec is None or getattr(spec, "kind", None) != "nm":
+            raise ValueError(
+                "the N:M group layout needs the tensor's PruneSpec of kind "
+                f"'nm' (its n/m shape the groups); got {spec!r}")
+        return pack_nm_groups(q, scale, keep, spec.n, spec.m)
+
+    def unpack(self, t: NMGroupPacked, k_rows: int) -> jax.Array:
+        val_j, off_j = split_nibbles(t.packed)  # the one nibble decode
+        val, off = np.asarray(val_j), np.asarray(off_j)
+        e, cols = off.shape
+        group = np.arange(e) // t.n
+        idx = group[:, None] * t.m + off  # (E, N)
+        dense = np.zeros((t.rows, cols), np.float32)
+        # scatter-add: pad slots carry value 0 and collide harmlessly
+        np.add.at(dense, (idx, np.broadcast_to(np.arange(cols), idx.shape)),
+                  val)
+        return jnp.asarray(dense * np.asarray(t.scale))
+
+    def matmul(self, x, t: NMGroupPacked) -> jax.Array:
+        return nm_matmul(x, t)
+
+    def fc_kernel(self, spikes_ts, t: NMGroupPacked) -> jax.Array:
+        from repro.kernels import ops  # deferred: kernels import at use time
+
+        return ops.nm_fc(spikes_ts, t.packed, t.scale, n=t.n, m=t.m)
+
+    def stored_entries(self, t: NMGroupPacked) -> float:
+        return float(np.asarray(t.count).sum())
+
+    def size_bytes(self, t: NMGroupPacked, k_rows: int,
+                   bits: int = 4) -> float:
+        slots = t.packed.shape[0] * t.packed.shape[1]  # incl. tail padding
+        return slots * (bits + nm_index_bits(t.m)) / 8.0
+
+    def flatten(self, t: NMGroupPacked) -> dict[str, np.ndarray]:
+        return {"packed": np.asarray(t.packed),
+                "scale": np.asarray(t.scale),
+                "count": np.asarray(t.count),
+                "meta": np.asarray([t.n, t.m, t.rows], np.int32)}
+
+    def unflatten(self, fields) -> NMGroupPacked:
+        meta = np.asarray(fields["meta"])
+        return NMGroupPacked(packed=fields["packed"], scale=fields["scale"],
+                             count=fields["count"], n=int(meta[0]),
+                             m=int(meta[1]), rows=int(meta[2]))
+
+
+NM_GROUP = base.register_layout(NMGroupPackedLayout())

@@ -1,21 +1,19 @@
-"""Zero-skipping packed-weight formats for compressed-RSNN inference.
+"""Deployment packer: trained floats -> pluggable packed-weight layouts.
 
 The paper deploys a 0.1 MB model: structured pruning (256 -> 128), 40%
 unstructured FC pruning, and 4-bit weights, then *executes* it with
-zero-skipping dataflows (§III-B).  This module is the deployment packer that
-turns a trained float parameter tree (+ ``CompressionConfig`` /
-``CompressionState``) into the formats the inference engine consumes:
+zero-skipping dataflows (§III-B).  This module turns a trained float
+parameter tree (+ ``CompressionConfig`` / ``CompressionState``) into the
+``PackedRSNN`` artifact the inference engine consumes.
 
-  * ``QuantTensor`` — nibble-packed int4 weights with per-output-channel
-    scales, the layout ``kernels/int4_matmul.py`` and
-    ``kernels/merged_spike_fc.py`` read directly;
-  * ``SparseColumns`` — a padded CSC ("CSR-style by output channel") view of
-    an unstructured-pruned matrix: for every output channel the nonzero row
-    indices and int4 values, padded to the densest column.  ``sparse_matmul``
-    gathers only the surviving rows — the software analogue of the
-    accelerator skipping pruned weights;
-  * ``PackedRSNN`` — the whole deployable artifact (weights + LIF constants),
-    a plain pytree so it can cross ``jax.jit`` boundaries.
+*How* each tensor is stored is owned by the ``core/layouts`` registry
+(``layouts.WeightLayout``): every quantized weight gets the dense int4
+layout (``QuantTensor`` — the nibble layout ``kernels/int4_matmul.py``
+reads), and every *masked* weight additionally gets the sparse layout its
+``PruneSpec`` resolves to — padded CSC (``SparseColumns``) for
+unstructured masks, the group-packed N:M layout (``layouts.nm``) for N:M
+specs.  This module re-exports the layout tensor types and their helpers
+so existing call sites keep one import surface.
 
 Dequantization (``dequantize``) is bit-exact with the QAT fake-quant
 (`compression.quantization.fake_quant`): ``round(w/s)`` held as int4 times
@@ -27,95 +25,37 @@ from __future__ import annotations
 
 from typing import NamedTuple
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
+from repro.core import layouts
 from repro.core import lif as lif_lib
 from repro.core.compression import pruning
 from repro.core.compression.compress import CompressionConfig, CompressionState
-from repro.core.compression.quantization import pack_int4, quantize_to_int, unpack_int4
+from repro.core.compression.quantization import quantize_to_int
+from repro.core.layouts.csc import (SparseColumns, csc_size_bytes,
+                                    csc_stored_entries, sparse_matmul,
+                                    sparsify_columns)
+from repro.core.layouts.dense import QuantTensor, dequantize
+from repro.core.layouts.nm import NMGroupPacked
 from repro.core.rsnn import RSNNConfig
 
-
-class QuantTensor(NamedTuple):
-    """Nibble-packed int4 weight matrix with per-output-channel scales."""
-
-    packed: jax.Array  # (K//2, N) int8: low nibble = even row
-    scale: jax.Array  # (1, N) float32
-
-
-class SparseColumns(NamedTuple):
-    """Padded column-compressed sparse int4 matrix (zero-skipping layout).
-
-    ``indices[i, n]`` is the row of the i-th surviving weight of output
-    channel ``n``; ``values[i, n]`` its integer (int4) value held in float32.
-    Columns shorter than the densest one are padded with (index 0, value 0),
-    so padded entries contribute nothing and no mask is needed.
-
-    ``count[n]`` is the number of *stored* entries of column ``n`` — the
-    pruning decision, which can exceed the nonzero count when a kept weight
-    quantizes to 0.  It exists for exact size accounting
-    (``packed_size_report`` vs ``compression.compressed_size_bytes``) and
-    is ``None`` for layouts built without a mask (kernel oracles).
-    """
-
-    indices: jax.Array  # (nnz_max, N) int32
-    values: jax.Array  # (nnz_max, N) float32, integer-valued in [-8, 7]
-    scale: jax.Array  # (1, N) float32
-    count: jax.Array | None = None  # (N,) int32 stored entries per column
+__all__ = [
+    "QuantTensor", "SparseColumns", "NMGroupPacked", "PackedRSNN",
+    "dequantize", "sparsify_columns", "sparse_matmul", "pack_model",
+    "quant_size_bytes", "csc_stored_entries", "csc_size_bytes",
+    "packed_size_report",
+]
 
 
 class PackedRSNN(NamedTuple):
-    """Deployable compressed model: packed weights + inference LIF constants."""
+    """Deployable compressed model: packed weights + inference LIF constants.
+
+    ``sparse`` maps each mask-pruned weight to its *layout-resolved* packed
+    tensor (``SparseColumns`` or ``NMGroupPacked``); consumers dispatch on
+    the tensor's type via ``layouts.layout_of`` rather than assuming CSC.
+    """
 
     quant: dict  # name -> QuantTensor (every quantized 2D weight)
-    sparse: dict  # name -> SparseColumns (unstructured-pruned weights only)
+    sparse: dict  # name -> layout tensor (unstructured/N:M-pruned weights)
     lif: dict  # {beta0, vth0, beta1, vth1}: (H,) float32, hw-rounded if cfg says
-
-
-def dequantize(qt: QuantTensor) -> jax.Array:
-    """(K, N) float32 dense weights; bit-exact with QAT fake-quant."""
-    return unpack_int4(qt.packed).astype(jnp.float32) * qt.scale
-
-
-def sparsify_columns(q: jax.Array, scale: jax.Array,
-                     keep: jax.Array | None = None) -> SparseColumns:
-    """Build the padded-CSC view of an int-quantized matrix (host-side).
-
-    q: (K, N) integer-valued.  ``keep`` is the pruning mask deciding which
-    entries are *stored* (the paper's accounting: storage follows the
-    pruning decision, even when a kept weight quantizes to 0 — those carry
-    value 0 and contribute nothing to the matmul).  ``keep=None`` stores
-    the nonzeros of ``q`` (mask-free oracle layouts).
-    """
-    qn = np.asarray(q)
-    kp = (qn != 0) if keep is None else np.asarray(keep).astype(bool)
-    nnz_max = max(int(kp.sum(axis=0).max()), 1)
-    # stable argsort on "is dropped": kept rows first, original row order kept
-    order = np.argsort(~kp, axis=0, kind="stable")[:nnz_max]
-    taken = np.take_along_axis(kp, order, axis=0)
-    vals = np.where(taken, np.take_along_axis(qn, order, axis=0), 0)
-    idx = np.where(taken, order, 0)
-    return SparseColumns(
-        indices=jnp.asarray(idx, jnp.int32),
-        values=jnp.asarray(vals, jnp.float32),
-        scale=jnp.asarray(scale, jnp.float32).reshape(1, -1),
-        count=jnp.asarray(kp.sum(axis=0), jnp.int32),
-    )
-
-
-def sparse_matmul(x: jax.Array, sc: SparseColumns) -> jax.Array:
-    """Zero-skipping matmul: x (B, K) @ CSC -> (B, N) float32.
-
-    Only the surviving rows of each output channel are gathered and
-    accumulated — work scales with nnz, not K*N (the paper's skipped
-    accumulates).  Accumulation order differs from the dense matmul, so
-    results agree to float tolerance, not bitwise.
-    """
-    xg = x.astype(jnp.float32)[:, sc.indices]  # (B, nnz_max, N)
-    acc = (xg * sc.values).sum(axis=1)
-    return acc * sc.scale
 
 
 def pack_model(params: dict, cfg: RSNNConfig, ccfg: CompressionConfig,
@@ -124,6 +64,8 @@ def pack_model(params: dict, cfg: RSNNConfig, ccfg: CompressionConfig,
 
     Mirrors the QAT materializer exactly (masks first, then quantize), so the
     dense-dequant execution of the packed model equals the QAT forward pass.
+    Each masked tensor's sparse layout comes from its ``PruneSpec``
+    (``layouts.resolve_for_spec``).
     """
     spec = ccfg.quant_spec
     if spec is None:
@@ -133,14 +75,18 @@ def pack_model(params: dict, cfg: RSNNConfig, ccfg: CompressionConfig,
             f"packed format is nibble-int4; weight_bits={spec.bits} would be "
             f"silently truncated by pack_int4")
     p = pruning.apply_masks(params, cstate.masks)
+    dense_layout = layouts.get_layout("dense")
+    prune_specs = ccfg.resolved_prune_specs
     quant: dict[str, QuantTensor] = {}
-    sparse: dict[str, SparseColumns] = {}
+    sparse: dict = {}
     for name in ccfg.quant_names:
         q, scale = quantize_to_int(p[name], spec)
-        quant[name] = QuantTensor(packed=pack_int4(q),
-                                  scale=jnp.asarray(scale).reshape(1, -1))
+        quant[name] = dense_layout.pack(q, scale)
         if name in cstate.masks:
-            sparse[name] = sparsify_columns(q, scale, keep=cstate.masks[name])
+            pspec = prune_specs.get(name)
+            layout = layouts.resolve_for_spec(pspec)
+            sparse[name] = layout.pack(q, scale, keep=cstate.masks[name],
+                                       spec=pspec)
     lif = {}
     for i in (0, 1):
         beta, vth = lif_lib.inference_constants(params[f"lif{i}"],
@@ -156,26 +102,12 @@ def pack_model(params: dict, cfg: RSNNConfig, ccfg: CompressionConfig,
 def quant_size_bytes(qt: QuantTensor, bits: int = 4) -> float:
     """Dense int4 storage (the paper's layout: no index overhead)."""
     k = qt.packed.shape[0] * 2
-    n = qt.packed.shape[1]
-    return k * n * bits / 8.0
-
-
-def csc_stored_entries(sc: SparseColumns) -> float:
-    """Stored entries of a CSC layout: the mask-kept count when available
-    (exact Fig. 12 accounting), else the measured nonzeros."""
-    if sc.count is not None:
-        return float(np.asarray(sc.count).sum())
-    return float((np.asarray(sc.values) != 0).sum())
-
-
-def csc_size_bytes(sc: SparseColumns, k_rows: int, bits: int = 4) -> float:
-    """CSC storage: value nibbles + ceil(log2 K)-bit row indices per entry."""
-    index_bits = max(int(np.ceil(np.log2(max(k_rows, 2)))), 1)
-    return csc_stored_entries(sc) * (bits + index_bits) / 8.0
+    return layouts.get_layout("dense").size_bytes(qt, k, bits)
 
 
 def packed_size_report(packed: PackedRSNN, bits: int = 4) -> dict:
-    """Per-tensor and total deployed bytes, dense-int4 vs zero-skip CSC.
+    """Per-tensor and total deployed bytes, dense-int4 vs the tensor's
+    sparse layout (``<layout>_int4`` keyed by the layout tag).
 
     ``broadcast_total_bytes`` is the paper's Fig. 12 accounting: stored
     (mask-surviving) weights at ``bits`` each with zero index overhead (the
@@ -189,17 +121,21 @@ def packed_size_report(packed: PackedRSNN, bits: int = 4) -> dict:
     total = 0.0
     broadcast_total = 0.0
     for name, qt in packed.quant.items():
+        k_rows = qt.packed.shape[0] * 2
         dense = quant_size_bytes(qt, bits)
         entry = {"dense_int4": dense}
         nnz_bytes = dense
+        layout_bytes = dense
         if name in packed.sparse:
-            sc = packed.sparse[name]
-            entry["csc_int4"] = csc_size_bytes(sc, qt.packed.shape[0] * 2, bits)
-            nnz_bytes = csc_stored_entries(sc) * bits / 8.0
+            t = packed.sparse[name]
+            layout = layouts.layout_of(t)
+            layout_bytes = layout.size_bytes(t, k_rows, bits)
+            entry["layout"] = layout.name
+            entry[f"{layout.name}_int4"] = layout_bytes
+            nnz_bytes = layout.stored_entries(t) * bits / 8.0
         entry["nnz_int4"] = nnz_bytes
         report[name] = entry
-        total += min(entry["dense_int4"],
-                     entry.get("csc_int4", entry["dense_int4"]))
+        total += min(dense, layout_bytes)
         broadcast_total += nnz_bytes
     report["total_bytes"] = total
     report["broadcast_total_bytes"] = broadcast_total

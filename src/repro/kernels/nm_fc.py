@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: fused zero-skip FC over the group-packed N:M layout.
+
+Consumes ``core.layouts.nm.NMGroupPacked`` directly — the regular-sparsity
+deployment layout of N:M-pruned weights (fixed ``n`` survivors per ``m``
+input rows, value nibble + in-group offset nibble in one byte, no index
+padding).  Compared to ``kernels/sparse_fc.py`` (padded CSC), the weight
+tile carries *half* the VMEM traffic at equal nnz — one int8 byte per
+entry instead of an int32 index plus a float32 value — and the global row
+ids are reconstructed in VMEM from the entry position (``e // n``) and the
+stored offset, the software analogue of the accelerator's implicit-index
+regular-sparsity fetch.
+
+Merged-spike input path (paper §II-D2): the kernel accepts the raw
+``(TS, B, H)`` spike trains and sums them over TS in VMEM before the
+gather — one pass serves every time step.  The gather/FMA/sum ordering
+mirrors ``sparse_fc`` exactly, so the same mask packed as CSC or N:M-group
+executes bit-identically (tests/test_nm_fc.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fit_block(dim: int, block: int) -> int:
+    """Largest tile <= block that divides dim (grid must tile exactly; the
+    paper's fc_dim=1920 is not a power-of-2 multiple)."""
+    block = min(block, dim)
+    while dim % block:
+        block -= 1
+    return block
+
+
+def _nm_fc_kernel(s_ref, p_ref, scale_ref, o_ref, *, n, m):
+    # merge time steps in VMEM: one pass for all TS
+    x = s_ref[...].astype(jnp.float32).sum(axis=0)  # (bB, H)
+    p = p_ref[...]  # (E, bN) int8: value nibble | offset nibble << 4
+    val = (p & 0xF).astype(jnp.int8)
+    val = jnp.where(val >= 8, val - 16, val).astype(jnp.float32)
+    off = ((p >> 4) & 0xF).astype(jnp.int32)  # in-group row offset
+    e, bn = p.shape
+    # implicit indexing: entry e of any column belongs to row group e // n
+    group = jax.lax.broadcasted_iota(jnp.int32, (e, bn), 0) // n
+    idx = group * m + off  # (E, bN) global rows
+    bb = x.shape[0]
+    # gather surviving rows per output channel; tail pad slots carry value 0
+    # so they contribute nothing (no mask needed)
+    gathered = jnp.take(x, idx.reshape(-1), axis=1).reshape(bb, e, bn)
+    acc = (gathered * val[None]).sum(axis=1)  # (bB, bN)
+    o_ref[...] = (acc * scale_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "m", "block_b", "block_n",
+                                             "interpret"))
+def nm_fc(spikes_ts: jax.Array, packed: jax.Array, scale: jax.Array, *,
+          n: int, m: int, block_b: int = 128, block_n: int = 512,
+          interpret: bool = False) -> jax.Array:
+    """Zero-skip FC: merged spikes @ N:M-group-packed int4 -> (B, N) f32.
+
+    spikes_ts: (TS, B, H) binary spike trains (a pre-merged (B, H) input is
+    also accepted); packed: (groups * n, N) int8 from
+    ``core.layouts.nm.NMGroupPacked``; scale: (N,) or (1, N) per-channel.
+    Accumulation order matches ``layouts.nm.nm_matmul`` (sum over the
+    entry axis), so results agree with the dense matmul to float tolerance
+    and with the padded-CSC path bitwise for the same mask.
+    """
+    if spikes_ts.ndim == 2:
+        spikes_ts = spikes_ts[None]
+    ts, b, h = spikes_ts.shape
+    e, nn = packed.shape
+    bb, bn = _fit_block(b, block_b), _fit_block(nn, block_n)
+    grid = (b // bb, nn // bn)
+    return pl.pallas_call(
+        functools.partial(_nm_fc_kernel, n=n, m=m),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ts, bb, h), lambda i, j: (0, i, 0)),
+            pl.BlockSpec((e, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bb, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, nn), jnp.float32),
+        interpret=interpret,
+    )(spikes_ts, packed, scale.reshape(1, nn))

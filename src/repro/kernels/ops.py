@@ -10,6 +10,7 @@ import jax
 
 from repro.kernels import int4_matmul as _i4
 from repro.kernels import merged_spike_fc as _mfc
+from repro.kernels import nm_fc as _nfc
 from repro.kernels import rsnn_cell as _cell
 from repro.kernels import sparse_fc as _sfc
 
@@ -36,3 +37,8 @@ def merged_spike_fc(spikes_ts, packed, scale, *, block_b=128, block_n=128):
 def sparse_fc(spikes_ts, indices, values, scale, *, block_b=128, block_n=512):
     return _sfc.sparse_fc(spikes_ts, indices, values, scale, block_b=block_b,
                           block_n=block_n, interpret=_interpret())
+
+
+def nm_fc(spikes_ts, packed, scale, *, n, m, block_b=128, block_n=512):
+    return _nfc.nm_fc(spikes_ts, packed, scale, n=n, m=m, block_b=block_b,
+                      block_n=block_n, interpret=_interpret())

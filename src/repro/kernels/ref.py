@@ -72,3 +72,22 @@ def sparse_fc_ref(spikes_ts: jax.Array, indices: jax.Array, values: jax.Array,
     sc = sparse.SparseColumns(indices=indices, values=values,
                               scale=scale.reshape(1, -1))
     return sparse.sparse_matmul(merged, sc)
+
+
+def nm_fc_ref(spikes_ts: jax.Array, packed: jax.Array, scale: jax.Array, *,
+              n: int, m: int) -> jax.Array:
+    """Zero-skip FC over the group-packed N:M layout: the merged-spike
+    input path fused onto ``core.layouts.nm.nm_matmul`` (delegated, so the
+    oracle can never drift from the deployment layout's gather semantics).
+
+    spikes_ts: (TS, B, H) binary (or pre-merged (B, H)); packed:
+    (groups * n, N) int8 value|offset nibbles; scale: (N,) or (1, N).
+    """
+    from repro.core.layouts import nm as nm_layout  # deferred, as above
+
+    merged = spikes_ts.sum(axis=0) if spikes_ts.ndim == 3 else spikes_ts
+    t = nm_layout.NMGroupPacked(
+        packed=packed, scale=scale.reshape(1, -1),
+        count=jnp.zeros((packed.shape[1],), jnp.int32), n=n, m=m,
+        rows=packed.shape[0] // n * m)
+    return nm_layout.nm_matmul(merged, t)

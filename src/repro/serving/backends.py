@@ -10,18 +10,24 @@ weight bundle (``BackendContext``), returns a uniform ``OpTable``:
     per layer name and per precision: dense float, dense dequant, or the
     int4 Pallas matmul on the packed nibbles);
   * ``fc``          — the readout over the TS spike trains (merged-spike
-    dense, per-ts int4, or the zero-skip CSC path).
+    dense, per-ts int4, or the zero-skip sparse path).
+
+The zero-skip readout is *layout-dispatched*: the packed FC tensor's type
+resolves its ``core/layouts`` ``WeightLayout`` (padded CSC, group-packed
+N:M, ...), and the backend binds either the layout's jnp oracle (``ref``)
+or its fused Pallas kernel (``pallas``/``sparse``) — a new layout plugs in
+without a backend edit, and a new backend without naming any layout.
 
 Built-in backends:
 
   ``ref`` (alias ``jnp``)  — the jnp oracles in ``kernels/ref``; with
-      ``sparse_fc`` the readout is ``core.sparse.sparse_matmul``'s CSC
-      gather (the materializing jnp reference).
+      ``sparse_fc`` the readout is the packed layout's jnp oracle (the
+      materializing reference, e.g. ``core.layouts.csc.sparse_matmul``).
   ``pallas``               — the fused Pallas kernels in ``kernels/ops``
       (interpret mode on CPU, Mosaic on TPU).
-  ``sparse``               — ``pallas`` cells/stimulus plus the fused
-      zero-skip FC kernel (``kernels/sparse_fc``) consuming the padded-CSC
-      ``SparseColumns`` directly.
+  ``sparse``               — ``pallas`` cells/stimulus plus the packed FC
+      layout's fused zero-skip kernel (``kernels/sparse_fc`` for CSC,
+      ``kernels/nm_fc`` for N:M-group).
 
 New kernels plug in via ``register`` without touching the engine: the
 engine resolves a table once at construction and calls through it.
@@ -34,7 +40,7 @@ from typing import Callable, NamedTuple
 
 import jax
 
-from repro.core import sparse, spike_ops
+from repro.core import layouts, spike_ops
 from repro.core.rsnn import RSNNConfig
 from repro.kernels import ops, ref
 
@@ -45,17 +51,18 @@ class BackendContext:
 
     ``dense`` holds float matrices for ops that consume dense weights (the
     full parameter set at float precision; the bit-exact dequant copies at
-    int4).  ``quant``/``sparse`` hold the packed int4 / padded-CSC layouts
-    (int4 precision only).  Resolution happens once per engine build, so
-    the returned closures capture concrete arrays and stay jit-friendly.
+    int4).  ``quant`` holds the packed int4 layout and ``sparse`` each
+    masked tensor's layout-resolved packed form (int4 precision only).
+    Resolution happens once per engine build, so the returned closures
+    capture concrete arrays and stay jit-friendly.
     """
 
     cfg: RSNNConfig
     precision: str  # "float" | "int4"
-    sparse_fc: bool  # zero-skip CSC readout instead of the dense FC
+    sparse_fc: bool  # zero-skip layout readout instead of the dense FC
     dense: dict  # name -> (K, N) float32
-    quant: dict  # name -> sparse.QuantTensor
-    sparse: dict  # name -> sparse.SparseColumns
+    quant: dict  # name -> layouts.dense.QuantTensor
+    sparse: dict  # name -> layout tensor (SparseColumns / NMGroupPacked)
 
 
 class OpTable(NamedTuple):
@@ -128,11 +135,20 @@ def _dense_ff(ctx: BackendContext) -> Callable:
 
 
 def _fc_op(ctx: BackendContext, *, mfc: Callable, i4mm: Callable,
-           csc_fc: Callable) -> Callable:
-    """Resolve the readout: CSC zero-skip > packed int4 > dense float."""
+           fused: bool) -> Callable:
+    """Resolve the readout: layout zero-skip > packed int4 > dense float.
+
+    The zero-skip path dispatches on the packed FC tensor's *layout*
+    (``core/layouts`` registry): whatever ``pack_model`` resolved from the
+    tensor's ``PruneSpec`` — padded CSC or group-packed N:M — binds here
+    without the backend naming it.  ``fused=True`` binds the layout's
+    Pallas kernel, ``False`` its jnp oracle.
+    """
     if ctx.sparse_fc:
-        sc = ctx.sparse["fc_w"]
-        return lambda s1: csc_fc(s1, sc)
+        t = ctx.sparse["fc_w"]
+        layout = layouts.layout_of(t)
+        fc_fn = layout.fc_kernel if fused else layout.fc_oracle
+        return lambda s1: fc_fn(s1, t)
     if ctx.precision == "int4":
         qt = ctx.quant["fc_w"]
         scale = qt.scale.reshape(-1)
@@ -151,11 +167,8 @@ def _fc_op(ctx: BackendContext, *, mfc: Callable, i4mm: Callable,
 
 @register("ref", "jnp", dense_stimulus=True)
 def _build_ref(ctx: BackendContext) -> OpTable:
-    def csc_fc(s1, sc):
-        return sparse.sparse_matmul(spike_ops.merge_spikes(s1), sc)
-
     fc = _fc_op(ctx, mfc=ref.merged_spike_fc_ref, i4mm=ref.int4_matmul_ref,
-                csc_fc=csc_fc)
+                fused=False)
     return OpTable(name="ref", rsnn_cell=ref.rsnn_cell_ref,
                    ff_matmul=_dense_ff(ctx), fc=fc, mxu_aligned=False)
 
@@ -169,17 +182,14 @@ def _build_pallas(ctx: BackendContext) -> OpTable:
     else:
         ff = _dense_ff(ctx)
 
-    def csc_fc(s1, sc):
-        return ops.sparse_fc(s1, sc.indices, sc.values, sc.scale)
-
     fc = _fc_op(ctx, mfc=ops.merged_spike_fc, i4mm=ops.int4_matmul,
-                csc_fc=csc_fc)
+                fused=True)
     return OpTable(name="pallas", rsnn_cell=ops.rsnn_cell, ff_matmul=ff,
                    fc=fc, mxu_aligned=True)
 
 
 @register("sparse")
 def _build_sparse(ctx: BackendContext) -> OpTable:
-    """Pallas cells/stimulus + the fused zero-skip CSC readout."""
+    """Pallas cells/stimulus + the packed layout's fused zero-skip readout."""
     ctx = dataclasses.replace(ctx, sparse_fc=True)
     return _build_pallas(ctx)._replace(name="sparse")

@@ -169,8 +169,9 @@ class CompiledRSNN:
                     cstate = init_compression(params, ccfg)
                 self.packed = sparse.pack_model(params, cfg, ccfg, cstate)
             if engine.wants_sparse_fc and "fc_w" not in self.packed.sparse:
-                raise ValueError("sparse_fc needs an unstructured-pruned "
-                                 "fc_w (set ccfg.fc_prune_frac > 0)")
+                raise ValueError("sparse_fc needs a mask-pruned fc_w (set "
+                                 "ccfg.fc_prune_frac > 0 or give fc_w a "
+                                 "PruneSpec)")
             missing = set(cfg.layer_shapes) - set(self.packed.quant)
             if missing:
                 raise ValueError(
@@ -248,9 +249,9 @@ class CompiledRSNN:
 
         ``engine=None`` derives the execution path from the manifest: the
         artifact's precision, its preferred backend (overridable via
-        ``backend=``), and its stored static input scale.  An explicit
-        ``engine`` is used verbatim and must match the artifact's
-        precision.
+        ``backend=``), its zero-skip FC preference (``sparse_fc``), and
+        its stored static input scale.  An explicit ``engine`` is used
+        verbatim and must match the artifact's precision.
         """
         from repro.core import artifact as artifact_lib
 
@@ -259,6 +260,7 @@ class CompiledRSNN:
             engine = EngineConfig(
                 backend=backend or art.backend or "jnp",
                 precision=art.precision,
+                sparse_fc=art.sparse_fc,
                 input_scale=art.input_scale)
         elif engine.precision != art.precision:
             raise ValueError(

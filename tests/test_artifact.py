@@ -169,13 +169,64 @@ def test_manifest_roundtrips_configs_and_sparsity(setup, tmp_path):
 
 
 def test_rejects_unknown_schema_version(setup, tmp_path):
+    """A newer (or garbage) schema version is refused with an error that
+    states BOTH the version found and the versions this reader supports —
+    the operator must be able to tell which side to upgrade."""
     cfg, params, _, scale = setup
     path, _, _ = _int4_artifact(tmp_path, cfg, params, scale)
     mf = path / artifact.MANIFEST
     m = json.loads(mf.read_text())
-    m["schema_version"] = artifact.SCHEMA_VERSION + 1
+    found = artifact.SCHEMA_VERSION + 1
+    m["schema_version"] = found
     mf.write_text(json.dumps(m))
-    with pytest.raises(artifact.ArtifactError, match="schema version"):
+    with pytest.raises(artifact.ArtifactError) as err:
+        artifact.load_artifact(path)
+    msg = str(err.value)
+    assert f"version {found}" in msg  # the version found on disk
+    for supported in artifact.SUPPORTED_VERSIONS:  # what this reader reads
+        assert str(supported) in msg
+
+
+def test_v1_artifact_loads_as_implicit_csc(setup, tmp_path):
+    """A schema-v1 artifact (the PR 4 writer: no ``layouts``/``sparse_fc``
+    manifest keys, ``csc.*`` tensor keys) must still load — sparse tensors
+    as implicit padded CSC — and serve bit-identically."""
+    cfg, params, x, scale = setup
+    path, ccfg, cstate = _int4_artifact(tmp_path, cfg, params, scale)
+    # rewrite the manifest to exactly the v1 shape
+    mf = path / artifact.MANIFEST
+    m = json.loads(mf.read_text())
+    assert m["schema_version"] == 2  # current writer
+    m["schema_version"] = 1
+    del m["layouts"]
+    del m["sparse_fc"]
+    mf.write_text(json.dumps(m))
+
+    art = artifact.load_artifact(path)
+    assert art.manifest["schema_version"] == 1
+    assert isinstance(art.packed.sparse["fc_w"], sparse.SparseColumns)
+    assert art.layouts == {"fc_w": "csc"}  # derived, not from the manifest
+    assert art.sparse_fc is False
+    mem = S.CompiledRSNN(cfg, params,
+                         S.EngineConfig(precision="int4", input_scale=scale),
+                         ccfg, cstate)
+    served = S.CompiledRSNN.from_artifact(path)
+    la, _, _ = served.run(x)
+    lb, _, _ = mem.run(x)
+    np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_rejects_manifest_layout_tag_mismatch(setup, tmp_path):
+    """v2 manifests declare per-tensor layout tags; a tag disagreeing with
+    the tensor payload is an integrity error, not a silent override."""
+    cfg, params, _, scale = setup
+    path, _, _ = _int4_artifact(tmp_path, cfg, params, scale)
+    mf = path / artifact.MANIFEST
+    m = json.loads(mf.read_text())
+    assert m["layouts"] == {"fc_w": "csc"}
+    m["layouts"] = {"fc_w": "nm_group"}
+    mf.write_text(json.dumps(m))
+    with pytest.raises(artifact.ArtifactError, match="layout tags"):
         artifact.load_artifact(path)
 
 

@@ -111,6 +111,32 @@ def _check_prune_spec_invariants(kind, rows, cols, frac, n, m, seed):
                   [m_l0 == 0] == 0.0)
 
 
+def _check_nm_mask_tail(rows, cols, n, m, seed):
+    """N:M masks for widths not divisible by m: every *full* group keeps
+    exactly n survivors, and the tail group of r = rows % m rows keeps
+    exactly min(n, r) — its largest-|w| rows, never over-pruned below the
+    top-n rule."""
+    w = np.random.default_rng(seed).normal(size=(rows, cols)).astype(
+        np.float32)
+    mask = np.asarray(pruning.nm_prune_mask(jnp.asarray(w), n, m))
+    assert mask.shape == w.shape
+    assert set(np.unique(mask)) <= {0.0, 1.0}
+    full = rows // m
+    if full:
+        groups = mask[:full * m].reshape(full, m, cols).sum(axis=1)
+        np.testing.assert_array_equal(groups, n)
+    r = rows % m
+    if r:
+        tail = mask[full * m:]
+        np.testing.assert_array_equal(tail.sum(axis=0), min(n, r))
+        if r > n:  # the kept tail rows are the largest-|w| ones (up to ties)
+            a = np.abs(w[full * m:])
+            for c in range(cols):
+                kept = a[:, c][tail[:, c] == 1]
+                dropped = a[:, c][tail[:, c] == 0]
+                assert kept.min() >= dropped.max() - 1e-6
+
+
 # --------------------------------------- deterministic tier (always runs)
 
 
@@ -146,6 +172,18 @@ def test_prune_spec_invariants(kind, rows, cols, frac, n, m, seed):
     _check_prune_spec_invariants(kind, rows, cols, frac, n, m, seed)
 
 
+@pytest.mark.parametrize("rows,cols,n,m,seed", [
+    (10, 4, 2, 4, 0),   # tail of 2 == n: keeps both
+    (11, 8, 2, 4, 1),   # tail of 3 > n: top-2 of the tail
+    (9, 5, 2, 4, 2),    # tail of 1 < n: keeps the single row
+    (13, 3, 3, 8, 3),   # tail of 5 > n with a wide group
+    (16, 6, 2, 4, 4),   # divisible: tail path must not disturb full groups
+    (3, 7, 2, 4, 5),    # no full group at all
+])
+def test_nm_mask_tail_handling(rows, cols, n, m, seed):
+    _check_nm_mask_tail(rows, cols, n, m, seed)
+
+
 # -------------------------------------------- fuzzed tier (hypothesis only)
 
 
@@ -168,6 +206,13 @@ if HAVE_HYPOTHESIS:
            seed=st.integers(0, 2**31 - 1))
     def test_int4_pack_roundtrip_fuzzed(k, n, seed):
         _check_int4_pack_roundtrip(k, n, seed)
+
+    @settings(max_examples=25, deadline=None)
+    @given(rows=st.integers(1, 64), cols=st.integers(1, 16),
+           n=st.integers(1, 4), m=st.integers(4, 16),
+           seed=st.integers(0, 2**31 - 1))
+    def test_nm_mask_tail_handling_fuzzed(rows, cols, n, m, seed):
+        _check_nm_mask_tail(rows, cols, n, m, seed)
 
     @settings(max_examples=15, deadline=None)
     @given(kind=st.sampled_from(["magnitude", "nm", "row", "channel"]),

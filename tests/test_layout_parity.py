@@ -1,0 +1,165 @@
+"""CSC-vs-N:M-group layout bit parity, end to end: the same model with the
+same 2:4 FC mask, packed as padded CSC (``PruneSpec(layout='csc')``) vs
+the group-packed N:M layout (``layout='auto'`` -> ``nm_group``), must
+serve **identical** logits through every loop contract — StreamLoop and
+ShardedStreamLoop, synchronous (pipeline_depth=0) and pipelined (>0),
+oracle (jnp) and fused-kernel (sparse) backends, in-process and from the
+on-disk artifact.  The layout is storage, never semantics.  Fast tier."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import artifact, rsnn, sparse
+from repro.core.compression import (CompressionConfig, PruneSpec,
+                                    init_compression)
+from repro.core.layouts.csc import SparseColumns
+from repro.core.layouts.nm import NMGroupPacked
+from repro.serving import stream as S
+from repro.serving.sharded import ShardedStreamLoop
+
+
+def _ccfg(layout: str) -> CompressionConfig:
+    return CompressionConfig(weight_bits=4, prune_specs=(
+        ("fc_w", PruneSpec(kind="nm", n=2, m=4, layout=layout)),))
+
+
+@pytest.fixture
+def engines(small_cfg, rng_key):
+    """The same params packed both ways, zero-skip FC on (jnp oracle)."""
+    params = rsnn.init_params(rng_key, small_cfg)
+    built = {}
+    for layout in ("csc", "auto"):
+        ccfg = _ccfg(layout)
+        built[layout] = S.CompiledRSNN(
+            small_cfg, params,
+            S.EngineConfig(precision="int4", sparse_fc=True,
+                           input_scale=0.05),
+            ccfg=ccfg, cstate=init_compression(params, ccfg))
+    csc_e, nm_e = built["csc"], built["auto"]
+    assert isinstance(csc_e.packed.sparse["fc_w"], SparseColumns)
+    assert isinstance(nm_e.packed.sparse["fc_w"], NMGroupPacked)
+    return small_cfg, params, csc_e, nm_e
+
+
+def _utts(cfg, lens=(7, 10, 4, 6)):
+    rng = np.random.default_rng(5)
+    return [rng.normal(size=(t, cfg.input_dim)).astype(np.float32)
+            for t in lens]
+
+
+def _serve(loop_cls, engine, utts, **kw):
+    loop = loop_cls(engine, batch_slots=2, **kw)
+    for u in utts:
+        loop.submit(u)
+    return [r.stacked_logits() for r in loop.run()]
+
+
+def test_run_chunked_bitwise(engines):
+    """Chunked CompiledRSNN.run with state carry: CSC == N:M, bitwise."""
+    cfg, _, csc_e, nm_e = engines
+    x = jnp.asarray(np.random.default_rng(3).normal(size=(2, 10,
+                                                          cfg.input_dim)),
+                    jnp.float32)
+    la, sa, _ = csc_e.run(x[:, :4])
+    lb, sb, _ = nm_e.run(x[:, :4])
+    np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    la2, _, _ = csc_e.run(x[:, 4:], sa)
+    lb2, _, _ = nm_e.run(x[:, 4:], sb)
+    np.testing.assert_array_equal(np.asarray(la2), np.asarray(lb2))
+
+
+@pytest.mark.parametrize("depth", [0, 2])
+def test_streamloop_bitwise(engines, depth):
+    """StreamLoop, synchronous and pipelined: CSC == N:M, bitwise."""
+    cfg, _, csc_e, nm_e = engines
+    utts = _utts(cfg)
+    for a, b in zip(_serve(S.StreamLoop, csc_e, utts, pipeline_depth=depth),
+                    _serve(S.StreamLoop, nm_e, utts, pipeline_depth=depth)):
+        np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("depth", [0, 2])
+def test_sharded_streamloop_bitwise(engines, depth):
+    """ShardedStreamLoop (1-device mesh in-process; the multi-device case
+    rides the sharded suite's subprocess tests): CSC == N:M, bitwise,
+    synchronous and pipelined."""
+    cfg, _, csc_e, nm_e = engines
+    utts = _utts(cfg)
+    done = [_serve(ShardedStreamLoop, e, utts, max_frames=16,
+                   pipeline_depth=depth) for e in (csc_e, nm_e)]
+    for a, b in zip(*done):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_fused_kernel_backend_bitwise(small_cfg, rng_key):
+    """The 'sparse' backend (fused Pallas kernels, interpret on CPU):
+    sparse_fc.py over CSC == nm_fc.py over N:M-group, bitwise."""
+    params = rsnn.init_params(rng_key, small_cfg)
+    logits = []
+    x = jnp.asarray(np.random.default_rng(7).normal(
+        size=(2, 4, small_cfg.input_dim)), jnp.float32)
+    for layout in ("csc", "auto"):
+        ccfg = _ccfg(layout)
+        eng = S.CompiledRSNN(
+            small_cfg, params,
+            S.EngineConfig(backend="sparse", precision="int4",
+                           input_scale=0.05),
+            ccfg=ccfg, cstate=init_compression(params, ccfg))
+        out, _, _ = eng.run(x)
+        logits.append(np.asarray(out))
+    np.testing.assert_array_equal(*logits)
+
+
+def test_artifact_roundtrip_bitwise(engines, tmp_path):
+    """Both layouts through the v2 artifact: saved, loaded, and served
+    logits stay bit-identical to each other and to in-process packing."""
+    cfg, _, csc_e, nm_e = engines
+    utts = _utts(cfg, lens=(5, 8))
+    baseline = _serve(S.StreamLoop, csc_e, utts)
+    for name, eng in (("csc", csc_e), ("nm", nm_e)):
+        path = artifact.save_artifact(
+            tmp_path / name, cfg=cfg, packed=eng.packed,
+            ccfg=_ccfg("csc" if name == "csc" else "auto"),
+            input_scale=0.05, backend="jnp", sparse_fc=True)
+        art_eng = S.CompiledRSNN.from_artifact(path)
+        assert art_eng.engine.wants_sparse_fc
+        for a, b in zip(baseline, _serve(S.StreamLoop, art_eng, utts)):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_nm_artifact_manifest_tags(engines, tmp_path):
+    cfg, _, _, nm_e = engines
+    path = artifact.save_artifact(tmp_path / "nm", cfg=cfg,
+                                  packed=nm_e.packed, ccfg=_ccfg("auto"),
+                                  input_scale=0.05, sparse_fc=True)
+    art = artifact.load_artifact(path)
+    assert art.layouts == {"fc_w": "nm_group"}
+    assert art.sparse_fc is True
+    assert isinstance(art.packed.sparse["fc_w"], NMGroupPacked)
+    t = art.packed.sparse["fc_w"]
+    src = nm_e.packed.sparse["fc_w"]
+    assert (t.n, t.m, t.rows) == (src.n, src.m, src.rows)
+    np.testing.assert_array_equal(np.asarray(t.packed),
+                                  np.asarray(src.packed))
+    # size report in the manifest carries the layout-tagged rows
+    assert art.size_report["fc_w"]["layout"] == "nm_group"
+    rep = sparse.packed_size_report(nm_e.packed)
+    assert art.size_report["fc_w"]["nm_group_int4"] == \
+        rep["fc_w"]["nm_group_int4"]
+
+
+def test_place_weights_preserves_nm_layout(engines):
+    """place_weights device_puts the packed tree; the NM tensor's static
+    aux (n/m/rows) must survive and the op table re-resolve to the NM
+    path (what ShardedStreamLoop does on construction)."""
+    cfg, _, _, nm_e = engines
+    x = jnp.asarray(np.random.default_rng(9).normal(
+        size=(1, 3, cfg.input_dim)), jnp.float32)
+    before, _, _ = nm_e.run(x)
+    nm_e.place_weights(jax.devices()[0])
+    t = nm_e._ctx.sparse["fc_w"]
+    assert isinstance(t, NMGroupPacked) and (t.n, t.m) == (2, 4)
+    after, _, _ = nm_e.run(x)
+    np.testing.assert_array_equal(np.asarray(before), np.asarray(after))

@@ -1,0 +1,284 @@
+"""The pluggable WeightLayout subsystem (core/layouts): registry dispatch,
+pack/unpack round trips, per-spec layout resolution, size accounting
+(N:M-group strictly smaller than padded CSC at equal nnz), and the
+layout-level artifact codec.  Fast tier."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import layouts
+from repro.core.compression import pruning
+from repro.core.compression.compress import (CompressionConfig, PruneSpec,
+                                             init_compression)
+from repro.core.compression.quantization import quantize_to_int
+from repro.core.layouts.csc import SparseColumns
+from repro.core.layouts.dense import QuantTensor
+from repro.core.layouts.nm import NMGroupPacked, nm_index_bits
+
+
+def _quantized(rows, cols, seed=0):
+    w = jnp.asarray(np.random.default_rng(seed).normal(size=(rows, cols)),
+                    jnp.float32)
+    q, scale = quantize_to_int(w)
+    return w, q, scale
+
+
+# --------------------------------------------------------------- registry
+
+
+def test_builtin_layouts_registered():
+    assert set(layouts.available_layouts()) >= {"dense", "csc", "nm_group"}
+    for name in ("dense", "csc", "nm_group"):
+        assert layouts.get_layout(name).name == name
+
+
+def test_get_layout_unknown_name():
+    with pytest.raises(ValueError, match="unknown weight layout"):
+        layouts.get_layout("banana")
+
+
+def test_layout_of_dispatches_on_tensor_type():
+    w, q, scale = _quantized(16, 8)
+    dense_t = layouts.get_layout("dense").pack(q, scale)
+    assert isinstance(dense_t, QuantTensor)
+    assert layouts.layout_of(dense_t).name == "dense"
+    mask = pruning.magnitude_prune_mask(w, 0.5)
+    csc_t = layouts.get_layout("csc").pack(q, scale, keep=mask)
+    assert isinstance(csc_t, SparseColumns)
+    assert layouts.layout_of(csc_t).name == "csc"
+    with pytest.raises(TypeError, match="no registered weight layout"):
+        layouts.layout_of(object())
+
+
+def test_register_rejects_name_collision():
+    class Impostor(layouts.csc.SparseColumnsLayout):
+        name = "csc"
+
+    with pytest.raises(ValueError, match="already"):
+        layouts.register_layout(Impostor())
+
+
+def test_register_and_unregister_plugin():
+    class PluginTensor(tuple):
+        pass
+
+    class Plugin(layouts.csc.SparseColumnsLayout):
+        name = "plugin_csc"
+        tensor_type = PluginTensor
+
+    layouts.register_layout(Plugin())
+    try:
+        assert "plugin_csc" in layouts.available_layouts()
+        assert layouts.get_layout("plugin_csc").name == "plugin_csc"
+    finally:
+        layouts.unregister_layout("plugin_csc")
+    assert "plugin_csc" not in layouts.available_layouts()
+
+
+# ------------------------------------------------------- spec -> layout
+
+
+def test_resolve_for_spec_auto():
+    assert layouts.resolve_for_spec(None).name == "csc"
+    assert layouts.resolve_for_spec(
+        PruneSpec(kind="magnitude", frac=0.4)).name == "csc"
+    assert layouts.resolve_for_spec(
+        PruneSpec(kind="nm", n=2, m=4)).name == "nm_group"
+    # m too wide for the offset nibble -> falls back to CSC
+    assert layouts.resolve_for_spec(
+        PruneSpec(kind="nm", n=8, m=32)).name == "csc"
+
+
+def test_resolve_for_spec_explicit_overrides_auto():
+    assert layouts.resolve_for_spec(
+        PruneSpec(kind="nm", n=2, m=4, layout="csc")).name == "csc"
+    assert layouts.resolve_for_spec(
+        PruneSpec(kind="nm", n=2, m=4, layout="nm_group")).name == "nm_group"
+
+
+def test_prune_spec_layout_validation():
+    with pytest.raises(ValueError, match="unknown weight layout"):
+        PruneSpec(kind="magnitude", frac=0.4, layout="banana")
+    with pytest.raises(ValueError, match="nm_group"):
+        PruneSpec(kind="magnitude", frac=0.4, layout="nm_group")
+    # dense storage of a masked tensor would break survivor accounting
+    with pytest.raises(ValueError, match="dense"):
+        PruneSpec(kind="magnitude", frac=0.4, layout="dense")
+    # the nibble constraint fails at config time, not at pack time
+    with pytest.raises(ValueError, match="m <= 16"):
+        PruneSpec(kind="nm", n=4, m=32, layout="nm_group")
+    PruneSpec(kind="nm", n=4, m=32)  # auto still allowed: resolves to csc
+
+
+def test_nm_layout_pack_needs_mask_and_spec():
+    _, q, scale = _quantized(16, 8)
+    nm = layouts.get_layout("nm_group")
+    with pytest.raises(ValueError, match="keep"):
+        nm.pack(q, scale)
+    mask = pruning.nm_prune_mask(jnp.asarray(q, jnp.float32), 2, 4)
+    with pytest.raises(ValueError, match="PruneSpec"):
+        nm.pack(q, scale, keep=mask, spec=PruneSpec(kind="magnitude",
+                                                    frac=0.5))
+
+
+def test_nm_layout_rejects_wide_groups_and_irregular_masks():
+    _, q, scale = _quantized(32, 8)
+    nm = layouts.get_layout("nm_group")
+    with pytest.raises(ValueError, match="m <= 16"):
+        layouts.nm.pack_nm_groups(q, scale, jnp.ones_like(q), n=8, m=32)
+    # a magnitude mask is (almost surely) not 2:4-regular
+    w = jnp.asarray(np.random.default_rng(1).normal(size=(32, 8)), jnp.float32)
+    bad = pruning.magnitude_prune_mask(w, 0.5)
+    with pytest.raises(ValueError, match="not 2:4-regular"):
+        nm.pack(jnp.asarray(q), scale, keep=bad,
+                spec=PruneSpec(kind="nm", n=2, m=4))
+
+
+# ------------------------------------------------------ pack/unpack/exec
+
+
+@pytest.mark.parametrize("rows,cols,n,m", [(16, 8, 2, 4), (24, 12, 1, 4),
+                                           (32, 6, 3, 8), (10, 5, 2, 4)])
+def test_nm_pack_structure_and_unpack(rows, cols, n, m):
+    """Fixed n slots per group per column; unpack reproduces the masked
+    dequantized matrix exactly (tail groups included)."""
+    w, q, scale = _quantized(rows, cols, seed=rows + n)
+    mask = pruning.nm_prune_mask(w, n, m)
+    t = layouts.nm.pack_nm_groups(q, scale, mask, n, m)
+    groups = -(-rows // m)
+    assert t.packed.shape == (groups * n, cols)
+    assert t.packed.dtype == jnp.int8
+    assert (t.n, t.m, t.rows) == (n, m, rows)
+    np.testing.assert_array_equal(np.asarray(t.count),
+                                  np.asarray(mask).sum(axis=0))
+    dense = np.asarray(q, np.float32) * np.asarray(mask) * np.asarray(scale)
+    np.testing.assert_allclose(
+        np.asarray(layouts.get_layout("nm_group").unpack(t, rows)), dense,
+        rtol=0, atol=1e-6)
+
+
+@pytest.mark.parametrize("layout_name", ["csc", "nm_group"])
+def test_layout_matmul_matches_masked_dense(layout_name):
+    w, q, scale = _quantized(16, 24, seed=7)
+    spec = PruneSpec(kind="nm", n=2, m=4, layout=layout_name)
+    mask = pruning.nm_prune_mask(w, 2, 4)
+    layout = layouts.resolve_for_spec(spec)
+    assert layout.name == layout_name
+    t = layout.pack(q, scale, keep=mask, spec=spec)
+    x = jnp.asarray(np.random.default_rng(2).normal(size=(4, 16)),
+                    jnp.float32)
+    dense = x @ jnp.asarray(
+        np.asarray(q, np.float32) * np.asarray(mask) * np.asarray(scale))
+    np.testing.assert_allclose(np.asarray(layout.matmul(x, t)),
+                               np.asarray(dense), rtol=1e-5, atol=1e-5)
+
+
+def test_csc_and_nm_matmul_bitwise_identical_on_same_mask():
+    """The same N:M mask packed as padded CSC or N:M-group stores the same
+    (row, value) sequence per column, so the two gathers accumulate in the
+    same order -> bit-identical results (the engine-level parity contract,
+    here at the layout level)."""
+    w, q, scale = _quantized(64, 48, seed=3)
+    mask = pruning.nm_prune_mask(w, 2, 4)
+    spec = PruneSpec(kind="nm", n=2, m=4)
+    csc_t = layouts.get_layout("csc").pack(q, scale, keep=mask)
+    nm_t = layouts.get_layout("nm_group").pack(q, scale, keep=mask,
+                                               spec=spec)
+    x = jnp.asarray(np.random.default_rng(4).normal(size=(8, 64)),
+                    jnp.float32)
+    o_csc = layouts.get_layout("csc").matmul(x, csc_t)
+    o_nm = layouts.get_layout("nm_group").matmul(x, nm_t)
+    np.testing.assert_array_equal(np.asarray(o_csc), np.asarray(o_nm))
+    # and through the merged-spike fc oracle
+    s = jnp.asarray(np.random.default_rng(5).integers(0, 2, (2, 8, 64)),
+                    jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(layouts.get_layout("csc").fc_oracle(s, csc_t)),
+        np.asarray(layouts.get_layout("nm_group").fc_oracle(s, nm_t)))
+
+
+def test_nm_tensor_is_jit_and_device_put_transparent():
+    """n/m/rows are static pytree aux: device_put touches only arrays and
+    a jitted function closes over the ints as compile-time constants."""
+    w, q, scale = _quantized(16, 8, seed=9)
+    mask = pruning.nm_prune_mask(w, 2, 4)
+    t = layouts.nm.pack_nm_groups(q, scale, mask, 2, 4)
+    placed = jax.device_put(t)
+    assert (placed.n, placed.m, placed.rows) == (2, 4, 16)
+    assert isinstance(placed.n, int)
+    x = jnp.ones((2, 16), jnp.float32)
+    jit_mm = jax.jit(layouts.nm.nm_matmul)
+    np.testing.assert_array_equal(np.asarray(jit_mm(x, placed)),
+                                  np.asarray(layouts.nm.nm_matmul(x, t)))
+
+
+# ------------------------------------------------------- size accounting
+
+
+def test_nm_size_strictly_smaller_than_csc_at_equal_nnz():
+    """The headline: no global row ids, no padding -> fewer bytes for the
+    same stored entries, at every m < K."""
+    for rows, n, m in [(64, 2, 4), (128, 2, 4), (128, 4, 8), (64, 1, 16)]:
+        w, q, scale = _quantized(rows, 32, seed=rows + m)
+        mask = pruning.nm_prune_mask(w, n, m)
+        spec = PruneSpec(kind="nm", n=n, m=m)
+        csc_l, nm_l = layouts.get_layout("csc"), layouts.get_layout("nm_group")
+        csc_t = csc_l.pack(q, scale, keep=mask)
+        nm_t = nm_l.pack(q, scale, keep=mask, spec=spec)
+        assert csc_l.stored_entries(csc_t) == nm_l.stored_entries(nm_t)
+        assert nm_l.size_bytes(nm_t, rows) < csc_l.size_bytes(csc_t, rows)
+    assert nm_index_bits(4) == 2
+    assert nm_index_bits(16) == 4
+
+
+def test_packed_size_report_keys_per_layout():
+    """The report keys each sparse tensor's bytes on its layout tag and
+    the broadcast total still matches the training-side accounting."""
+    from repro.core import rsnn, sparse
+    from repro.core.compression.compress import compressed_size_bytes
+    from repro.core.rsnn import RSNNConfig
+
+    cfg = RSNNConfig(input_dim=8, hidden_dim=16, fc_dim=24, num_ts=2)
+    params = rsnn.init_params(jax.random.PRNGKey(0), cfg)
+    ccfg = CompressionConfig(weight_bits=4, prune_specs=(
+        ("fc_w", PruneSpec(kind="nm", n=2, m=4)),
+        ("l0_wh", PruneSpec(kind="magnitude", frac=0.5)),
+    ))
+    cstate = init_compression(params, ccfg)
+    packed = sparse.pack_model(params, cfg, ccfg, cstate)
+    assert isinstance(packed.sparse["fc_w"], NMGroupPacked)
+    assert isinstance(packed.sparse["l0_wh"], SparseColumns)
+    rep = sparse.packed_size_report(packed)
+    assert rep["fc_w"]["layout"] == "nm_group"
+    assert rep["l0_wh"]["layout"] == "csc"
+    assert rep["fc_w"]["nm_group_int4"] < rep["fc_w"]["dense_int4"]
+    assert "csc_int4" in rep["l0_wh"]
+    assert rep["broadcast_total_bytes"] == \
+        compressed_size_bytes(params, ccfg, cstate)
+
+
+# ------------------------------------------------------- artifact codec
+
+
+@pytest.mark.parametrize("layout_name,kind", [("csc", "magnitude"),
+                                              ("nm_group", "nm")])
+def test_layout_flatten_unflatten_roundtrip(layout_name, kind):
+    w, q, scale = _quantized(16, 8, seed=11)
+    if kind == "nm":
+        spec = PruneSpec(kind="nm", n=2, m=4)
+        mask = pruning.nm_prune_mask(w, 2, 4)
+    else:
+        spec = PruneSpec(kind="magnitude", frac=0.5)
+        mask = pruning.magnitude_prune_mask(w, 0.5)
+    layout = layouts.get_layout(layout_name)
+    t = layout.pack(q, scale, keep=mask, spec=spec)
+    fields = layout.flatten(t)
+    assert all(isinstance(v, np.ndarray) for v in fields.values())
+    back = layout.unflatten({k: jnp.asarray(v) for k, v in fields.items()})
+    for a, b in zip(jax.tree_util.tree_leaves(t),
+                    jax.tree_util.tree_leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    if layout_name == "nm_group":
+        assert (back.n, back.m, back.rows) == (t.n, t.m, t.rows)

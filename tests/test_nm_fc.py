@@ -1,0 +1,119 @@
+"""Fused N:M-group FC Pallas kernel (kernels/nm_fc.py): interpret-mode
+parity against the layout oracle (kernels/ref.nm_fc_ref /
+layouts.nm.nm_matmul), the dense matmul, and — bitwise — the padded-CSC
+kernel on the same mask, over an (n, m) x N x B sweep plus tail/degenerate
+edge cases.  Fast tier."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import layouts
+from repro.core.compression import pruning
+from repro.core.compression.quantization import quantize_to_int
+from repro.kernels import nm_fc as nfc_lib
+from repro.kernels import ops, ref
+
+
+def _nm_packed(h, n_out, nm_n, nm_m, seed):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(h, n_out)), jnp.float32)
+    q, scale = quantize_to_int(w)
+    mask = pruning.nm_prune_mask(w, nm_n, nm_m)
+    t = layouts.nm.pack_nm_groups(q, scale, mask, nm_n, nm_m)
+    dense = jnp.asarray(
+        np.asarray(q, np.float32) * np.asarray(mask) * np.asarray(scale))
+    return t, mask, dense
+
+
+@pytest.mark.parametrize("nm", [(1, 4), (2, 4), (3, 8)])
+@pytest.mark.parametrize("n_out", [64, 256])
+@pytest.mark.parametrize("b", [8, 128])
+def test_nm_fc_parity_sweep(nm, n_out, b):
+    """Kernel == layout oracle (bit-compatible gather) == dense matmul,
+    with interpret=True pinned and a multi-tile grid (blocks < B, N)."""
+    h, ts = 64, 2
+    nm_n, nm_m = nm
+    t, _, dense_w = _nm_packed(h, n_out, nm_n, nm_m,
+                               seed=b + n_out + nm_m)
+    rng = np.random.default_rng(1)
+    s = jnp.asarray(rng.integers(0, 2, (ts, b, h)), jnp.float32)
+
+    o_k = nfc_lib.nm_fc(s, t.packed, t.scale, n=nm_n, m=nm_m,
+                        block_b=min(64, b), block_n=min(64, n_out),
+                        interpret=True)
+    o_ref = ref.nm_fc_ref(s, t.packed, t.scale, n=nm_n, m=nm_m)
+    o_layout = layouts.nm.nm_matmul(s.sum(axis=0), t)
+    dense = s.sum(axis=0) @ dense_w
+
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_ref),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_layout),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(dense),
+                               rtol=1e-4, atol=1e-4)
+    # the group layout really skips: entry slots per column < K
+    assert t.packed.shape[0] == h // nm_m * nm_n < h
+
+
+def test_nm_fc_bitwise_matches_csc_kernel_on_same_mask():
+    """The acceptance contract at kernel level: the same 2:4 mask packed
+    as padded CSC or N:M-group runs through the two fused kernels with the
+    same gather/FMA/sum ordering -> bit-identical outputs."""
+    h, n_out, b = 64, 48, 16
+    t, mask, _ = _nm_packed(h, n_out, 2, 4, seed=21)
+    rng = np.random.default_rng(2)
+    q, scale = quantize_to_int(
+        jnp.asarray(np.random.default_rng(21).normal(size=(h, n_out)),
+                    jnp.float32))
+    sc = layouts.get_layout("csc").pack(q, scale, keep=mask)
+    s = jnp.asarray(rng.integers(0, 2, (2, b, h)), jnp.float32)
+    o_nm = ops.nm_fc(s, t.packed, t.scale, n=2, m=4, block_b=8, block_n=16)
+    o_csc = ops.sparse_fc(s, sc.indices, sc.values, sc.scale, block_b=8,
+                          block_n=16)
+    np.testing.assert_array_equal(np.asarray(o_nm), np.asarray(o_csc))
+
+
+def test_nm_fc_tail_group_contributes_padded_zeros():
+    """K % m != 0: the tail group's missing slots are (offset 0, value 0)
+    pads that must not contribute; kernel == masked dense matmul."""
+    h, n_out, b = 22, 16, 4  # tail group of 2 rows, n=3 keeps both
+    t, mask, dense_w = _nm_packed(h, n_out, 3, 4, seed=5)
+    assert t.packed.shape[0] == 6 * 3  # ceil(22/4)=6 groups, 3 slots each
+    s = jnp.ones((2, b, h), jnp.float32)  # every spike fires: worst case
+    o_k = np.asarray(ops.nm_fc(s, t.packed, t.scale, n=3, m=4))
+    dense = np.asarray(s.sum(axis=0) @ dense_w)
+    np.testing.assert_allclose(o_k, dense, rtol=1e-5, atol=1e-5)
+
+
+def test_nm_fc_all_zero_column_is_exact_zero():
+    """An output channel whose kept weights all quantize to 0 must produce
+    exactly 0.0 — value nibbles are 0 even though offsets are stored."""
+    h, n_out, b = 16, 8, 4
+    rng = np.random.default_rng(3)
+    q = rng.integers(-8, 8, (h, n_out))
+    q[:, 5] = 0
+    scale = np.full(n_out, 0.07, np.float32)
+    w = jnp.asarray(q, jnp.float32)
+    mask = pruning.nm_prune_mask(w, 2, 4)
+    t = layouts.nm.pack_nm_groups(jnp.asarray(q), scale, mask, 2, 4)
+    s = jnp.ones((2, b, h), jnp.float32)
+    o_k = np.asarray(ops.nm_fc(s, t.packed, t.scale, n=2, m=4))
+    assert (o_k[:, 5] == 0.0).all()
+    dense = np.asarray(
+        s.sum(axis=0) @ (w * mask * jnp.asarray(scale)))
+    np.testing.assert_allclose(o_k, dense, rtol=1e-5, atol=1e-5)
+
+
+def test_nm_fc_premerged_input_matches_ts_path():
+    """The (B, H) pre-merged entry point == merging (TS, B, H) in-kernel."""
+    h, n_out, b = 32, 64, 8
+    t, _, _ = _nm_packed(h, n_out, 2, 4, seed=11)
+    rng = np.random.default_rng(4)
+    s = jnp.asarray(rng.integers(0, 2, (2, b, h)), jnp.float32)
+    o_ts = ops.nm_fc(s, t.packed, t.scale, n=2, m=4)
+    o_2d = ops.nm_fc(s.sum(axis=0), t.packed, t.scale, n=2, m=4)
+    np.testing.assert_array_equal(np.asarray(o_ts), np.asarray(o_2d))
+    r_2d = ref.nm_fc_ref(s.sum(axis=0), t.packed, t.scale, n=2, m=4)
+    np.testing.assert_allclose(np.asarray(o_2d), np.asarray(r_2d),
+                               rtol=1e-6, atol=1e-6)
