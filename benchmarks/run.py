@@ -4,7 +4,12 @@ Prints ``name,us_per_call,derived`` CSV lines (us_per_call only for the
 timed entries; analytic tables report 0).  ``--only SUBSTR`` restricts the
 run to matching entries (the CI smoke runs ``--only bench_stream_pipeline``
 to keep the pipelined-serving row honest on every push); ``--list`` prints
-the available names so ``--only`` isn't guess-and-check.
+the available names so ``--only`` isn't guess-and-check.  A ``--only``
+that matches nothing exits non-zero listing the available names — a typo
+in a CI smoke must fail the job, not print a bare CSV header and pass.
+
+For persisted latency/throughput trajectories (rather than one-off CSV
+rows), see ``benchmarks/loadgen.py`` / ``benchmarks/trajectory.py``.
 """
 
 from __future__ import annotations
@@ -37,6 +42,11 @@ def _emit(name: str, us: float, derived) -> None:
     print(f"{name},{us:.2f},{json.dumps(derived, default=str)}")
 
 
+def all_names() -> tuple[str, ...]:
+    """Every runnable bench name (the values ``--only`` matches against)."""
+    return ANALYTIC + tuple(n for n, _ in TIMED) + ("roofline_summary",)
+
+
 def list_entries() -> None:
     """Print every runnable bench name (the values ``--only`` matches)."""
     for name in ANALYTIC:
@@ -46,22 +56,7 @@ def list_entries() -> None:
     print("roofline_summary  [derived]")
 
 
-def main(only: str | None = None) -> None:
-    print("name,us_per_call,derived")
-    for name in ANALYTIC:
-        if only and only not in name:
-            continue
-        rows, derived = getattr(T, name)()
-        _emit(name, 0.0, {"rows": rows, **derived})
-
-    for name, fn in TIMED:
-        if only and only not in name:
-            continue
-        us, d = getattr(T, fn)()
-        _emit(name, us, d)
-
-    if only and only not in "roofline_summary":
-        return
+def _run_roofline() -> None:
     # roofline summary (reads results/dryrun)
     try:
         from benchmarks import roofline
@@ -76,6 +71,44 @@ def main(only: str | None = None) -> None:
                       for r in worst]})
     except Exception as e:  # dry-run artifacts absent
         _emit("roofline_summary", 0.0, {"error": str(e)})
+
+
+def main(only: str | None = None) -> int:
+    """Run every entry whose name contains ``only`` (all when None).
+
+    Returns the number of entries run.  Zero matches is an error: the old
+    driver silently printed only the CSV header and exited 0 — a typo in
+    ``--only`` (e.g. the CI smoke's entry name) passed green running
+    nothing.  The roofline row goes through the same name match as every
+    other entry (the old ``only not in "roofline_summary"`` test matched
+    any substring of the *literal* — ``--only o`` ran it spuriously even
+    while skipping entries it was meant to select).
+    """
+    matches = lambda name: not only or only in name  # noqa: E731
+    selected = [n for n in all_names() if matches(n)]
+    if only and not selected:
+        print(f"error: --only {only!r} matches no benchmark entry; "
+              f"available:", file=sys.stderr)
+        for name in all_names():
+            print(f"  {name}", file=sys.stderr)
+        raise SystemExit(2)
+
+    print("name,us_per_call,derived")
+    for name in ANALYTIC:
+        if not matches(name):
+            continue
+        rows, derived = getattr(T, name)()
+        _emit(name, 0.0, {"rows": rows, **derived})
+
+    for name, fn in TIMED:
+        if not matches(name):
+            continue
+        us, d = getattr(T, fn)()
+        _emit(name, us, d)
+
+    if matches("roofline_summary"):
+        _run_roofline()
+    return len(selected)
 
 
 if __name__ == "__main__":

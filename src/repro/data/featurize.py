@@ -116,21 +116,34 @@ class AsyncFeaturizer:
         # leaving a consumer blocked on a queue that will never be fed
         while True:
             if self._stop.is_set():
+                # exhaustion/error is latched: the _DONE sentinel crosses the
+                # queue exactly once, so a second next() after exhaustion
+                # must not wait for it again (it would spin forever)
+                if self._err is not None:
+                    raise self._err
                 raise StopIteration
             try:
                 item = self._q.get(timeout=0.5)
             except queue.Empty:
                 continue
             if item is _DONE:
+                self._stop.set()  # latch: every later next() short-circuits
                 if self._err is not None:
                     raise self._err
                 raise StopIteration
             return item
 
     def close(self) -> None:
+        """Stop and join the worker (idempotent; also latched by exhaustion).
+
+        Drains the queue so a worker blocked on ``put`` observes ``_stop``
+        and exits, then joins it so no featurization work outlives the
+        consumer.  A pending worker error stays latched for ``__next__``.
+        """
         self._stop.set()
         try:
             while True:
                 self._q.get_nowait()
         except queue.Empty:
             pass
+        self._thread.join(timeout=5.0)

@@ -18,6 +18,7 @@ the subclasses, which hook ``_on_slot_filled`` for data placement.
 
 from __future__ import annotations
 
+import collections
 from typing import Any
 
 import numpy as np
@@ -35,7 +36,10 @@ class SlotScheduler:
         if batch_slots < 1:
             raise ValueError(f"batch_slots must be >= 1, got {batch_slots}")
         self.slots = batch_slots
-        self.queue: list[Any] = []
+        # deque, not list: refill pops from the head once per freed slot, and
+        # a load generator keeps thousands of streams queued — list.pop(0)
+        # is O(queue) per pop (quadratic over a backlog), popleft() is O(1)
+        self.queue: collections.deque[Any] = collections.deque()
         self.finished: list[Any] = []
         self.slot_req: list[Any | None] = [None] * batch_slots
         self.slot_pos = [0] * batch_slots
@@ -51,7 +55,7 @@ class SlotScheduler:
         and giving the subclass a chance to place the request's data."""
         for i in range(self.slots):
             if self.slot_req[i] is None and self.queue:
-                req = self.queue.pop(0)
+                req = self.queue.popleft()
                 self.slot_req[i] = req
                 self.slot_pos[i] = 0
                 self._on_slot_filled(i, req)

@@ -79,6 +79,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
@@ -488,10 +489,27 @@ def unpack_step_aux(vec, num_ts: int) -> dict:
 class StreamRequest:
     """One utterance: its frames in, its per-frame logits out.
 
-    In the pipelined contract, harvested logit blocks arrive as device
-    arrays in ``pending`` (one block per stream completion or watermark
-    flush) and materialize into ``logits`` rows when the pipeline retires
-    the completing step — or lazily, on the first ``stacked_logits`` call.
+    In the pipelined contract, harvested logit blocks arrive as
+    ``(device_block, fill)`` pairs in ``pending`` (one per stream
+    completion or watermark flush; the block is the stream's statically
+    shaped ring row, ``fill`` the number of valid leading frames) and
+    materialize into ``logits`` rows when the pipeline retires the
+    completing step — or lazily, on the first ``stacked_logits`` call.
+    Harvesting whole ring rows keeps the harvest op's shape independent of
+    the utterance length: a ``ring[i, :fill]`` slice would bake every
+    distinct (slot, length) pair into its own compiled executable — a
+    mid-serve compile storm under mixed-length load (multi-ms p99
+    outliers in ``benchmarks/loadgen.py``); the trim to ``fill`` happens
+    on the host after the block crosses.
+
+    Lifecycle timestamps (``StreamLoop.clock``, monotonic seconds) feed the
+    load-generator latency accounting (``benchmarks/loadgen.py``):
+    ``t_submit`` at enqueue, ``t_start`` when the stream takes a slot,
+    ``t_done`` when its last frame is scheduled (slot freed), ``t_harvest``
+    when its logits are host-resident — completion latency is
+    ``t_harvest - t_submit``, queue wait ``t_start - t_submit``.  In the
+    synchronous contract ``t_done == t_harvest``; pipelined, harvest lands
+    when the completing step retires.
     """
 
     sid: int
@@ -500,13 +518,18 @@ class StreamRequest:
     logits: list = dataclasses.field(default_factory=list)
     done: bool = False
     pending: list = dataclasses.field(default_factory=list, repr=False)
+    t_submit: float | None = None
+    t_start: float | None = None
+    t_done: float | None = None
+    t_harvest: float | None = None
 
     def _materialize(self) -> int:
-        """Fetch pending device-side logit blocks into ``logits`` rows;
+        """Fetch pending device-side logit blocks into ``logits`` rows
+        (each ring-row block host-trimmed to its ``fill`` valid frames);
         returns the number of device->host transfers performed."""
         n = len(self.pending)
-        for chunk in self.pending:
-            self.logits.extend(np.asarray(chunk))
+        for chunk, fill in self.pending:
+            self.logits.extend(np.asarray(chunk)[:fill])
         self.pending.clear()
         return n
 
@@ -564,6 +587,9 @@ class StreamLoop(SlotScheduler):
         self.pipeline_depth = pipeline_depth
         self.ring_frames = ring_frames
         self.track_sparsity = track_sparsity
+        # monotonic clock behind the request lifecycle stamps; swappable
+        # (deterministic tests, the load generator's virtual-time checks)
+        self.clock = time.monotonic
         self.state = engine.init_state(batch_slots)
         self._flushed = [0] * batch_slots  # frames already harvested, per slot
         self._inflight: collections.deque[_InflightStep] = collections.deque()
@@ -606,8 +632,10 @@ class StreamLoop(SlotScheduler):
     def _enqueue(self, frames: np.ndarray) -> int:
         sid = self._new_sid()
         req = StreamRequest(sid, frames, fc_dim=self.engine.cfg.fc_dim)
+        req.t_submit = self.clock()
         if len(req.frames) == 0:  # empty utterance: nothing to stream
             req.done = True
+            req.t_start = req.t_done = req.t_harvest = req.t_submit
             self.finished.append(req)
         else:
             self.queue.append(req)
@@ -619,8 +647,18 @@ class StreamLoop(SlotScheduler):
         blocks, if any, were already sliced out of the ring at its
         completion — ring rows are dead once harvested, so the new stream
         may overwrite them while those blocks are still in flight.)"""
+        req.t_start = self.clock()
         self._flushed[i] = 0
         self.state = reset_slot(self.state, i)
+
+    def _finish_slot(self, i: int) -> StreamRequest:
+        req = super()._finish_slot(i)
+        req.t_done = self.clock()
+        if self.pipeline_depth == 0:
+            # synchronous contract: logits were fetched this step, so the
+            # stream is fully host-resident the moment it finishes
+            req.t_harvest = req.t_done
+        return req
 
     # ------------------------------------------------------------ step path
 
@@ -699,13 +737,13 @@ class StreamLoop(SlotScheduler):
             fill = self.slot_pos[i] - self._flushed[i]
             if self.slot_pos[i] == len(r.frames):  # stream complete
                 if fill > 0:
-                    r.pending.append(self._ring[i, :fill])
+                    r.pending.append((self._ring[i], fill))
                 completed.append(r)
                 self._finish_slot(i)
                 self._flushed[i] = 0
                 self.state = reset_slot(self.state, i)
             elif fill == self.ring_frames:  # watermark flush: ring is full
-                r.pending.append(self._ring[i, :fill])
+                r.pending.append((self._ring[i], fill))
                 self._flushed[i] = self.slot_pos[i]
         return completed
 
@@ -717,6 +755,7 @@ class StreamLoop(SlotScheduler):
             jax.block_until_ready(step.handle)  # fence, not a transfer
         for r in step.completed:
             self.host_syncs += r._materialize()
+            r.t_harvest = self.clock()
 
     def _step_once_sync(self, active: np.ndarray) -> bool:
         """v1 synchronous contract: fetch logits (and counters, when a sink

@@ -1,0 +1,128 @@
+"""AsyncFeaturizer lifecycle: exhaustion and worker errors must *latch*.
+
+The pre-fix ``__next__`` waited on the queue unconditionally, but the
+``_DONE`` sentinel crosses the queue exactly once — a second ``next()``
+after exhaustion (or any iteration after an error) blocked forever.  These
+tests drive the iterator past its end repeatedly and through worker
+failures, with timeouts standing guard against the hang coming back.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.data.featurize import AsyncFeaturizer
+
+
+def _ident(u):
+    return u
+
+
+def _drain(feat):
+    return [np.asarray(x) for x in feat]
+
+
+def _next_with_timeout(feat, timeout=5.0):
+    """Run next(feat) on a helper thread so a regression to the old
+    blocking behavior fails the test instead of hanging the suite."""
+    box = {}
+
+    def _call():
+        try:
+            box["value"] = next(feat)
+        except BaseException as e:  # noqa: BLE001 - reraised below
+            box["raised"] = e
+
+    t = threading.Thread(target=_call, daemon=True)
+    t.start()
+    t.join(timeout)
+    assert not t.is_alive(), "next() hung after exhaustion"
+    if "raised" in box:
+        raise box["raised"]
+    return box["value"]
+
+
+def test_yields_in_order_then_stops():
+    utts = [np.full((3, 2), i, np.float32) for i in range(5)]
+    feat = AsyncFeaturizer(utts, _ident, depth=2)
+    out = _drain(feat)
+    assert len(out) == 5
+    for i, u in enumerate(out):
+        np.testing.assert_array_equal(u, utts[i])
+
+
+def test_exhaustion_is_latched():
+    """next() after StopIteration raises StopIteration again, immediately
+    — the old code waited for a second _DONE that never comes."""
+    feat = AsyncFeaturizer([np.zeros((2, 2))], _ident, depth=2)
+    assert len(_drain(feat)) == 1
+    for _ in range(3):
+        with pytest.raises(StopIteration):
+            _next_with_timeout(feat)
+
+
+def test_worker_error_propagates_and_latches():
+    def bad(u):
+        raise RuntimeError("featurize exploded")
+
+    feat = AsyncFeaturizer([np.zeros((2, 2))], bad, depth=2)
+    with pytest.raises(RuntimeError, match="featurize exploded"):
+        _next_with_timeout(feat)
+    # the error stays latched: later calls re-raise instead of hanging
+    with pytest.raises(RuntimeError, match="featurize exploded"):
+        _next_with_timeout(feat)
+
+
+def test_error_mid_stream_after_good_items():
+    calls = {"n": 0}
+
+    def flaky(u):
+        calls["n"] += 1
+        if calls["n"] == 3:
+            raise ValueError("bad utterance")
+        return u
+
+    feat = AsyncFeaturizer([np.zeros((2, 2))] * 5, flaky, depth=1)
+    got = 0
+    with pytest.raises(ValueError, match="bad utterance"):
+        while True:
+            _next_with_timeout(feat)
+            got += 1
+    assert got == 2
+
+
+def test_close_joins_worker():
+    """close() must unblock a worker stuck on a full queue and join it."""
+    utts = [np.zeros((2, 2))] * 50
+    feat = AsyncFeaturizer(utts, _ident, depth=1)
+    _next_with_timeout(feat)  # worker is alive, blocked on put()
+    feat.close()
+    assert not feat._thread.is_alive()
+    with pytest.raises(StopIteration):
+        _next_with_timeout(feat)
+    feat.close()  # idempotent
+
+
+def test_close_after_exhaustion():
+    feat = AsyncFeaturizer([np.zeros((2, 2))], _ident, depth=2)
+    assert len(_drain(feat)) == 1
+    feat.close()
+    assert not feat._thread.is_alive()
+
+
+def test_backpressure_bounds_queue():
+    """depth bounds how far the worker runs ahead of the consumer."""
+    produced = []
+
+    def record(u):
+        produced.append(time.monotonic())
+        return u
+
+    feat = AsyncFeaturizer([np.zeros((2, 2))] * 20, record, depth=2)
+    _next_with_timeout(feat)
+    time.sleep(0.2)
+    # queue(maxsize=2) + one blocked put + one returned item
+    assert len(produced) <= 4
+    feat.close()

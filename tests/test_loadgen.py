@@ -1,0 +1,298 @@
+"""Load-generator harness units: percentile math, workload determinism,
+lifecycle timestamps, BENCH schema validation, and trajectory compare
+flagging — plus the benchmark driver's no-match guard (a typo'd ``--only``
+must fail, not pass green running nothing)."""
+
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks import loadgen, trajectory  # noqa: E402
+from benchmarks import run as bench_run  # noqa: E402
+from repro.core import rsnn  # noqa: E402
+from repro.serving import stream as S  # noqa: E402
+
+
+# ----------------------------------------------------------- percentiles
+
+
+def test_nearest_rank_small_samples():
+    xs = [10.0, 20.0, 30.0, 40.0]
+    assert loadgen.nearest_rank(xs, 50) == 20.0
+    assert loadgen.nearest_rank(xs, 75) == 30.0
+    assert loadgen.nearest_rank(xs, 95) == 40.0
+    assert loadgen.nearest_rank(xs, 99) == 40.0
+    assert loadgen.nearest_rank(xs, 100) == 40.0
+    assert loadgen.nearest_rank(xs, 0) == 10.0  # clamped to rank 1
+    assert loadgen.nearest_rank([7.0], 1) == 7.0
+    # order-independent: always an observed sample, no interpolation
+    assert loadgen.nearest_rank([40.0, 10.0, 30.0, 20.0], 50) == 20.0
+
+
+def test_nearest_rank_hundred_samples():
+    xs = list(range(1, 101))  # value k is the k-th percentile exactly
+    assert loadgen.nearest_rank(xs, 50) == 50
+    assert loadgen.nearest_rank(xs, 95) == 95
+    assert loadgen.nearest_rank(xs, 99) == 99
+
+
+def test_nearest_rank_rejects_bad_input():
+    with pytest.raises(ValueError, match="percentile"):
+        loadgen.nearest_rank([1.0], 101)
+    with pytest.raises(ValueError, match="no samples"):
+        loadgen.nearest_rank([], 50)
+
+
+def test_latency_stats():
+    stats = loadgen.latency_stats([3.0, 1.0, 2.0, 4.0])
+    assert stats == {"n": 4, "p50": 2.0, "p95": 4.0, "p99": 4.0,
+                     "mean": 2.5, "max": 4.0}
+    empty = loadgen.latency_stats([])
+    assert empty["n"] == 0 and empty["p99"] == 0.0
+
+
+# -------------------------------------------------------------- workload
+
+
+def test_workload_is_deterministic():
+    wl = loadgen.Workload(seed=7, num_streams=5, min_frames=4, max_frames=9,
+                          rate=3.0)
+    u1, o1 = wl.materialize(input_dim=6)
+    u2, o2 = wl.materialize(input_dim=6)
+    assert len(u1) == 5
+    for a, b in zip(u1, u2):
+        np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(o1, o2)
+    # lengths honor the configured range
+    assert all(4 <= len(u) <= 9 for u in u1)
+
+
+def test_workload_closed_vs_open_offsets():
+    closed = loadgen.Workload(seed=1, num_streams=4, rate=None)
+    _, off = closed.materialize(3)
+    np.testing.assert_array_equal(off, np.zeros(4))
+    opened = loadgen.Workload(seed=1, num_streams=4, rate=10.0)
+    _, off = opened.materialize(3)
+    assert (off > 0).all() and (np.diff(off) > 0).all()
+
+
+def test_workload_identity_excludes_rate():
+    """Saturation probes vary only the rate; their identity (what compare
+    keys on) must not change with it."""
+    a = loadgen.Workload(seed=0, rate=None).identity()
+    b = loadgen.Workload(seed=0, rate=99.0).identity()
+    assert a == b
+    assert "rate" not in a
+
+
+def test_deque_refill_ab_reports_speedup():
+    ab = loadgen.deque_refill_ab(n=500)
+    assert ab["queued_streams"] == 500
+    assert ab["list_pop0_us"] > 0 and ab["deque_popleft_us"] > 0
+    assert ab["speedup"] > 0
+
+
+# --------------------------------------------------- lifecycle timestamps
+
+
+@pytest.fixture
+def tiny_loop_factory(small_cfg, rng_key):
+    params = rsnn.init_params(rng_key, small_cfg)
+    eng = S.CompiledRSNN(small_cfg, params,
+                         S.EngineConfig(input_scale=0.05))
+
+    def make(depth):
+        return S.StreamLoop(eng, batch_slots=2, pipeline_depth=depth)
+
+    return small_cfg, make
+
+
+@pytest.mark.parametrize("depth", [0, 2])
+def test_lifecycle_timestamps_ordered(tiny_loop_factory, depth):
+    """Every finished stream carries t_submit <= t_start <= t_done <=
+    t_harvest; the synchronous loop harvests at completion (t_harvest ==
+    t_done), the pipelined loop at drain (t_harvest >= t_done)."""
+    cfg, make = tiny_loop_factory
+    loop = make(depth)
+    rng = np.random.default_rng(0)
+    for frames in (5, 3, 7):
+        loop.submit(rng.normal(size=(frames, cfg.input_dim))
+                    .astype(np.float32))
+    done = loop.run()
+    assert len(done) == 3
+    for r in done:
+        assert r.t_submit is not None
+        assert r.t_submit <= r.t_start <= r.t_done <= r.t_harvest
+        if depth == 0:
+            assert r.t_harvest == r.t_done
+
+
+def test_run_workload_collects_stats(tiny_loop_factory):
+    cfg, make = tiny_loop_factory
+    loop = make(0)
+    wl = loadgen.Workload(seed=3, num_streams=4, min_frames=3, max_frames=6)
+    res = loadgen.run_workload(loop, wl)
+    assert res.streams == 4
+    utts, _ = wl.materialize(cfg.input_dim)
+    assert res.frames == sum(len(u) for u in utts)
+    assert len(res.step_us) == loop.steps > 0
+    assert len(res.completion_ms) == 4
+    assert all(c >= q >= 0 for c, q in zip(res.completion_ms,
+                                           res.queue_wait_ms))
+    assert res.frames_per_s > 0 and res.streams_per_s > 0
+    # closed loop: everything lands in the queue up front
+    assert res.max_backlog == 4
+
+
+# ------------------------------------------------- BENCH schema + compare
+
+
+def _stats(p50=100.0, p99=200.0):
+    return {"n": 10, "p50": p50, "p95": p99, "p99": p99,
+            "mean": p50, "max": p99}
+
+
+def _cell(key="slots2-depth0-csc-mesh1", p50=100.0, p99=200.0, sat=50.0,
+          tput=1000.0):
+    return {"key": key, "slots": 2, "pipeline_depth": 0, "layout": "csc",
+            "mesh": 1, "streams": 8, "frames": 100,
+            "frame_latency_us": _stats(p50, p99),
+            "stream_completion_ms": _stats(), "queue_wait_ms": _stats(),
+            "throughput_frames_per_s": tput,
+            "saturation_streams_per_s": sat,
+            "host_syncs_per_frame": 0.5,
+            "sparsity": {"fc_union_density": 0.5}}
+
+
+def _doc(**cell_kw):
+    return {"schema_version": trajectory.SCHEMA_VERSION,
+            "bench": "BENCH_6", "kind": "rsnn-serving-loadgen",
+            "created_utc": "2026-01-01T00:00:00Z", "git_sha": "deadbeef",
+            "machine": {"platform": "test", "cpu_count": 1},
+            "model": {"hidden_dim": 64}, "workload": {"seed": 0},
+            "cells": [_cell(**cell_kw)], "derived": {"notes": []}}
+
+
+def test_validate_doc_accepts_valid():
+    assert trajectory.validate_doc(_doc()) == []
+
+
+def test_validate_doc_flags_errors():
+    doc = _doc()
+    del doc["git_sha"]
+    assert any("git_sha" in e for e in trajectory.validate_doc(doc))
+
+    doc = _doc()
+    doc["schema_version"] = 99
+    assert any("schema_version" in e for e in trajectory.validate_doc(doc))
+
+    doc = _doc()
+    doc["cells"] = []
+    assert any("empty" in e for e in trajectory.validate_doc(doc))
+
+    doc = _doc()
+    del doc["cells"][0]["frame_latency_us"]["p99"]
+    assert any("p99" in e for e in trajectory.validate_doc(doc))
+
+    doc = _doc()
+    doc["cells"].append(_cell())  # duplicate key
+    assert any("duplicate" in e for e in trajectory.validate_doc(doc))
+
+    assert trajectory.validate_doc("nope") == \
+        ["document is not a JSON object"]
+
+
+def test_compare_docs_no_regression_within_threshold():
+    base, new = _doc(), _doc(p50=120.0, p99=240.0)  # +20%, under 50%
+    result = trajectory.compare_docs(new, base, threshold=0.5)
+    assert result["comparable"]
+    assert result["matched_cells"] == 1
+    assert result["regressions"] == []
+
+
+def test_compare_docs_flags_latency_regression():
+    base, new = _doc(), _doc(p99=400.0)  # p99 doubles
+    result = trajectory.compare_docs(new, base, threshold=0.5)
+    assert len(result["regressions"]) == 1
+    assert "frame_latency_us.p99" in result["regressions"][0]
+
+
+def test_compare_docs_direction_throughput():
+    """Throughput/saturation regress when they *fall*; a rise is an
+    improvement, never a regression."""
+    base = _doc()
+    worse = trajectory.compare_docs(_doc(sat=10.0), base, threshold=0.5)
+    assert any("saturation" in r for r in worse["regressions"])
+    better = trajectory.compare_docs(_doc(sat=200.0, tput=9000.0), base,
+                                     threshold=0.5)
+    assert better["regressions"] == []
+    assert len(better["improvements"]) == 2
+
+
+def test_compare_docs_threshold_scales():
+    new, base = _doc(p99=400.0), _doc()  # +100% p99
+    assert trajectory.compare_docs(new, base, 1.5)["regressions"] == []
+    assert trajectory.compare_docs(new, base, 0.5)["regressions"]
+
+
+def test_compare_docs_cross_machine_not_comparable():
+    base, new = _doc(), _doc(p99=900.0)
+    new["machine"] = {"platform": "other", "cpu_count": 64}
+    result = trajectory.compare_docs(new, base, threshold=0.5)
+    assert result["regressions"]  # still reported ...
+    assert not result["comparable"]  # ... but not enforceable
+    assert not result["fingerprint_match"]
+    assert result["workload_match"]
+
+
+def test_compare_docs_unmatched_cells():
+    base, new = _doc(), _doc(key="slots4-depth2-nm-mesh1")
+    result = trajectory.compare_docs(new, base, threshold=0.5)
+    assert result["matched_cells"] == 0
+    assert any("no baseline" in ln for ln in result["lines"])
+    assert any("dropped" in ln for ln in result["lines"])
+
+
+def test_bench_files_numeric_order(tmp_path):
+    for name in ("BENCH_10.json", "BENCH_2.json", "BENCH_6.json",
+                 "BENCH_x.json", "notes.txt"):
+        (tmp_path / name).write_text("{}")
+    files = trajectory.bench_files(tmp_path)
+    assert [p.name for p in files] == \
+        ["BENCH_2.json", "BENCH_6.json", "BENCH_10.json"]
+    latest = trajectory.latest_baseline(tmp_path,
+                                        exclude=tmp_path / "BENCH_10.json")
+    assert latest.name == "BENCH_6.json"
+
+
+# ------------------------------------------------- run.py no-match guard
+
+
+def test_run_only_no_match_exits_nonzero(capsys):
+    with pytest.raises(SystemExit) as exc:
+        bench_run.main("zzz_no_such_bench")
+    assert exc.value.code == 2
+    err = capsys.readouterr().err
+    assert "matches no benchmark entry" in err
+    for name in bench_run.all_names():
+        assert name in err  # the available names are listed for the fix
+
+
+def test_run_only_single_analytic_entry(capsys):
+    assert bench_run.main("table1_dimensions") == 1
+    out = capsys.readouterr().out
+    lines = [ln for ln in out.splitlines() if ln]
+    assert lines[0] == "name,us_per_call,derived"
+    assert len(lines) == 2 and lines[1].startswith("table1_dimensions,")
+    assert "roofline_summary" not in out
+
+
+def test_run_all_names_complete():
+    names = bench_run.all_names()
+    assert "roofline_summary" in names
+    assert "bench_stream_pipeline" in names  # the CI smoke's entry
+    assert len(names) == len(set(names))

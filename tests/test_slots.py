@@ -1,0 +1,121 @@
+"""SlotScheduler queue semantics: the deque-backed refill must keep the
+exact FIFO/refill ordering of the old list-backed queue under churn (the
+load generator keeps thousands of streams queued — ``list.pop(0)`` was
+O(queue) per refill, quadratic over a backlog; ``deque.popleft()`` is the
+fix, with identical observable behavior)."""
+
+import collections
+import types
+
+import numpy as np
+import pytest
+
+from repro.serving.slots import SlotScheduler
+
+
+def _req(tag):
+    return types.SimpleNamespace(tag=tag, done=False)
+
+
+class _ListModel:
+    """Reference model of the pre-fix scheduler: the same bookkeeping with
+    a plain-list queue drained by ``pop(0)``."""
+
+    def __init__(self, slots):
+        self.queue = []
+        self.finished = []
+        self.slot_req = [None] * slots
+        self.slots = slots
+
+    def refill(self):
+        for i in range(self.slots):
+            if self.slot_req[i] is None and self.queue:
+                self.slot_req[i] = self.queue.pop(0)
+
+    def finish(self, i):
+        req = self.slot_req[i]
+        req.done = True
+        self.finished.append(req)
+        self.slot_req[i] = None
+
+
+def test_queue_is_deque():
+    assert isinstance(SlotScheduler(2).queue, collections.deque)
+
+
+def test_fifo_refill_order():
+    s = SlotScheduler(2)
+    reqs = [_req(i) for i in range(5)]
+    s.queue.extend(reqs)
+    s._refill()
+    assert [r.tag for r in s.slot_req] == [0, 1]
+    assert [r.tag for r in s.queue] == [2, 3, 4]
+    s._finish_slot(0)
+    s._refill()
+    # freed slot takes the queue head; the untouched slot keeps its request
+    assert [r.tag for r in s.slot_req] == [2, 1]
+    assert s.finished[0].tag == 0 and s.finished[0].done
+
+
+def test_refill_hook_and_cursor_reset():
+    filled = []
+
+    class Hooked(SlotScheduler):
+        def _on_slot_filled(self, i, req):
+            filled.append((i, req.tag))
+
+    s = Hooked(2)
+    s.slot_pos = [7, 9]
+    s.queue.extend([_req("a"), _req("b")])
+    s._refill()
+    assert filled == [(0, "a"), (1, "b")]
+    assert s.slot_pos == [0, 0]
+
+
+def test_has_work_and_active_mask():
+    s = SlotScheduler(3)
+    assert not s.has_work
+    s.queue.append(_req(0))
+    assert s.has_work  # queued but no slot yet
+    s._refill()
+    assert s.has_work
+    np.testing.assert_array_equal(s.active_mask(), [True, False, False])
+    s._finish_slot(0)
+    assert not s.has_work
+    np.testing.assert_array_equal(s.active_mask(), [False, False, False])
+
+
+@pytest.mark.parametrize("slots", [1, 3])
+def test_churn_matches_list_model(slots):
+    """Seeded random submit/finish churn: the deque scheduler and the old
+    list-backed model agree on every slot assignment and the completion
+    order, step for step."""
+    rng = np.random.default_rng(slots)
+    s, m = SlotScheduler(slots), _ListModel(slots)
+    next_tag = 0
+    for _ in range(300):
+        op = rng.integers(0, 3)
+        if op == 0:  # submit a burst
+            for _ in range(int(rng.integers(1, 4))):
+                s.queue.append(_req(next_tag))
+                m.queue.append(_req(next_tag))
+                next_tag += 1
+        elif op == 1:
+            s._refill()
+            m.refill()
+        else:  # finish a random occupied slot
+            occupied = [i for i, r in enumerate(s.slot_req) if r is not None]
+            if occupied:
+                i = occupied[int(rng.integers(0, len(occupied)))]
+                s._finish_slot(i)
+                m.finish(i)
+        assert [getattr(r, "tag", None) for r in s.slot_req] == \
+               [getattr(r, "tag", None) for r in m.slot_req]
+        assert [r.tag for r in s.queue] == [r.tag for r in m.queue]
+    assert [r.tag for r in s.finished] == [r.tag for r in m.finished]
+    assert all(r.done for r in s.finished)
+
+
+def test_batch_slots_validated():
+    with pytest.raises(ValueError, match="batch_slots"):
+        SlotScheduler(0)
