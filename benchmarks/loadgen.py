@@ -37,14 +37,19 @@ Harness shape
 
 Results are written as a schema-versioned ``BENCH_<n>.json`` (machine
 fingerprint, git SHA, per-cell stats over the ``{slots x pipeline_depth x
-layout(csc,nm) x mesh}`` sweep, measured sparsity from the live
-``SparsityCounters``) — the persisted perf trajectory that
-``benchmarks/trajectory.py compare`` diffs across PRs.
+layout(csc,nm) x backend(jnp,pallas,fused) x mesh}`` sweep, measured
+sparsity from the live ``SparsityCounters``) — the persisted perf
+trajectory that ``benchmarks/trajectory.py compare`` diffs across PRs.
+The backend axis (schema v2) puts the single-dispatch mega-step
+(``kernels/megastep.py``) in the trajectory next to the per-op ``jnp``
+and ``pallas`` tables; it lives in the *cell* identity, not the model
+identity, so v2 docs stay comparable against the v1 ``BENCH_6.json``.
 
 CLI::
 
-    python -m benchmarks.loadgen --smoke            # tiny CI sweep -> BENCH_6.json
-    python -m benchmarks.loadgen --slots 1,4 --depths 0,2 --layouts csc,nm
+    python -m benchmarks.loadgen --smoke            # tiny CI sweep -> BENCH_7.json
+    python -m benchmarks.loadgen --slots 1,4 --depths 0,2 --layouts csc,nm \
+        --backends jnp,fused
     python -m benchmarks.trajectory compare BENCH_new.json   # then diff it
 """
 
@@ -78,9 +83,10 @@ from repro.serving.sharded import ShardedStreamLoop, stream_mesh  # noqa: E402
 from repro.serving.stream import (CompiledRSNN, EngineConfig,  # noqa: E402
                                   StreamLoop)
 
-BENCH_INDEX = 6  # this PR's trajectory point: BENCH_6.json
+BENCH_INDEX = 7  # this PR's trajectory point: BENCH_7.json
 INPUT_SCALE = 0.05  # static 8-bit calibration used across the benches
 LAYOUT_TAGS = {"csc": "csc", "nm": "nm_group"}
+BACKENDS = ("jnp", "pallas", "fused")  # sweepable engine backends
 
 
 # ------------------------------------------------------------- percentiles
@@ -168,19 +174,23 @@ class Workload:
 # ------------------------------------------------------------ engine/loops
 
 
-def build_engine(cfg: RSNNConfig, layout: str, seed: int = 0) -> CompiledRSNN:
+def build_engine(cfg: RSNNConfig, layout: str, seed: int = 0,
+                 backend: str = "jnp") -> CompiledRSNN:
     """Packed int4 engine whose pruned FC readout is stored in ``layout``.
 
     Both sweep layouts use the *same* 2:4 N:M mask (equal nnz, bit-identical
     logits — proven in tests/test_layout_parity.py), so the csc-vs-nm axis
-    isolates the storage layout, not the sparsity pattern.
+    isolates the storage layout, not the sparsity pattern.  The backend
+    axis likewise serves bit-identical logits (tests/test_megastep.py), so
+    it isolates dispatch structure: per-op tables (``jnp``/``pallas``) vs
+    the single-dispatch mega-step (``fused``).
     """
     params = rsnn.init_params(jax.random.PRNGKey(seed), cfg)
     spec = PruneSpec(kind="nm", n=2, m=4, layout=LAYOUT_TAGS[layout])
     ccfg = CompressionConfig(weight_bits=4, prune_specs=(("fc_w", spec),))
     return CompiledRSNN(
         cfg, params,
-        EngineConfig(backend="jnp", precision="int4", sparse_fc=True,
+        EngineConfig(backend=backend, precision="int4", sparse_fc=True,
                      input_scale=INPUT_SCALE),
         ccfg=ccfg, cstate=init_compression(params, ccfg))
 
@@ -379,8 +389,8 @@ def _sparsity_dict(loop: StreamLoop) -> dict:
             "fc_union_density": round(prof.fc_union_density, 4)}
 
 
-def run_cell(engine: CompiledRSNN, layout: str, slots: int, depth: int,
-             mesh: int, wl: Workload, sat_iters: int) -> dict:
+def run_cell(engine: CompiledRSNN, layout: str, backend: str, slots: int,
+             depth: int, mesh: int, wl: Workload, sat_iters: int) -> dict:
     """One sweep cell: warm-up, closed-loop service measurement, open-loop
     run at 70% of the measured service rate, saturation search."""
     loop = build_loop(engine, slots, depth, mesh, wl.max_frames)
@@ -398,10 +408,11 @@ def run_cell(engine: CompiledRSNN, layout: str, slots: int, depth: int,
     sat = find_saturation(loop, wl, service_rate, sat_iters)
 
     return {
-        "key": f"slots{slots}-depth{depth}-{layout}-mesh{mesh}",
+        "key": f"slots{slots}-depth{depth}-{layout}-{backend}-mesh{mesh}",
         "slots": slots,
         "pipeline_depth": depth,
         "layout": layout,
+        "backend": backend,
         "mesh": mesh,
         "streams": closed.streams,
         "frames": closed.frames,
@@ -439,18 +450,20 @@ def git_sha() -> str:
 
 
 def run_sweep(cfg: RSNNConfig, slots_list, depths, layouts, meshes,
-              wl: Workload, sat_iters: int) -> dict:
-    """The full ``{slots x depth x layout x mesh}`` sweep -> BENCH doc."""
+              wl: Workload, sat_iters: int, backends=("jnp",)) -> dict:
+    """The ``{slots x depth x layout x backend x mesh}`` sweep -> BENCH doc."""
     cells = []
     for layout in layouts:
-        engine = build_engine(cfg, layout)
-        for mesh in sorted(meshes):
-            for slots in slots_list:
-                for depth in depths:
-                    print(f"[loadgen] cell slots={slots} depth={depth} "
-                          f"layout={layout} mesh={mesh} ...", flush=True)
-                    cells.append(run_cell(engine, layout, slots, depth,
-                                          mesh, wl, sat_iters))
+        for backend in backends:
+            engine = build_engine(cfg, layout, backend=backend)
+            for mesh in sorted(meshes):
+                for slots in slots_list:
+                    for depth in depths:
+                        print(f"[loadgen] cell slots={slots} depth={depth} "
+                              f"layout={layout} backend={backend} "
+                              f"mesh={mesh} ...", flush=True)
+                        cells.append(run_cell(engine, layout, backend, slots,
+                                              depth, mesh, wl, sat_iters))
     ab = deque_refill_ab()
     doc = {
         "schema_version": trajectory.SCHEMA_VERSION,
@@ -459,10 +472,12 @@ def run_sweep(cfg: RSNNConfig, slots_list, depths, layouts, meshes,
         "created_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
         "git_sha": git_sha(),
         "machine": machine_fingerprint(),
+        # backend is a CELL axis since schema v2, not a model field —
+        # trajectory's model-identity comparison ignores it either way, so
+        # v2 docs stay comparable against the v1 baseline
         "model": {"input_dim": cfg.input_dim, "hidden_dim": cfg.hidden_dim,
                   "fc_dim": cfg.fc_dim, "num_ts": cfg.num_ts,
-                  "precision": "int4", "backend": "jnp",
-                  "fc_prune": "2:4"},
+                  "precision": "int4", "fc_prune": "2:4"},
         "workload": wl.identity(),
         "latency_definitions": {
             "frame_latency_us": "wall time of one step_once (one frame "
@@ -507,11 +522,13 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI sweep: 2 slots, depths {0,2}, csc+nm, "
-                         "mesh 1, small model")
+                         "jnp+fused, mesh 1, small model")
     ap.add_argument("--out", default=str(ROOT / f"BENCH_{BENCH_INDEX}.json"))
     ap.add_argument("--slots", default="1,4")
     ap.add_argument("--depths", default="0,2")
     ap.add_argument("--layouts", default="csc,nm")
+    ap.add_argument("--backends", default="jnp,fused",
+                    help=f"engine backends to sweep, from {BACKENDS}")
     ap.add_argument("--meshes", default="1")
     ap.add_argument("--streams", type=int, default=24)
     ap.add_argument("--min-frames", type=int, default=12)
@@ -527,6 +544,7 @@ def main(argv=None) -> int:
         cfg = RSNNConfig(input_dim=20, hidden_dim=64, fc_dim=192, num_ts=2)
         slots_list, depths, meshes = [2], [0, 2], [1]
         layouts = ["csc", "nm"]
+        backends = ["jnp", "fused"]
         wl = Workload(seed=args.seed, num_streams=8, min_frames=8,
                       max_frames=20)
         sat_iters = 1
@@ -536,6 +554,7 @@ def main(argv=None) -> int:
         depths = _parse_ints(args.depths)
         meshes = _parse_ints(args.meshes)
         layouts = [s.strip() for s in args.layouts.split(",") if s.strip()]
+        backends = [s.strip() for s in args.backends.split(",") if s.strip()]
         wl = Workload(seed=args.seed, num_streams=args.streams,
                       min_frames=args.min_frames, max_frames=args.max_frames)
         sat_iters = args.sat_iters
@@ -543,8 +562,12 @@ def main(argv=None) -> int:
         if lay not in LAYOUT_TAGS:
             ap.error(f"unknown layout {lay!r}; choose from "
                      f"{sorted(LAYOUT_TAGS)}")
+    for bk in backends:
+        if bk not in BACKENDS:
+            ap.error(f"unknown backend {bk!r}; choose from {BACKENDS}")
 
-    doc = run_sweep(cfg, slots_list, depths, layouts, meshes, wl, sat_iters)
+    doc = run_sweep(cfg, slots_list, depths, layouts, meshes, wl, sat_iters,
+                    backends=backends)
     out = Path(args.out)
     out.write_text(json.dumps(doc, indent=2) + "\n")
     print(f"[loadgen] wrote {out} ({len(doc['cells'])} cells, "

@@ -491,3 +491,94 @@ def bench_artifact_roundtrip():
         "paper_fig12_bytes": 100864,
         "schema_version": art.manifest["schema_version"],
     }
+
+
+def _frame_dispatches(engine) -> int:
+    """Kernel dispatches per frame step, counted by tracing the step's
+    executable with the resolved op-table entries wrapped in counters.
+
+    Each op-table call traced into ``_frame_step`` lowers to (at least)
+    one kernel dispatch on device, so the trace-time call count is the
+    dispatch structure the jitted step compiles to: 5 for the per-op
+    tables (ff l0, cell l0, ff l1, cell l1, fc), 1 for ``fused``.
+    """
+    from repro.serving import backends as B
+
+    counts = {"n": 0}
+
+    def wrap(fn):
+        def counted(*a, **k):
+            counts["n"] += 1
+            return fn(*a, **k)
+
+        return counted
+
+    ops = engine.ops
+    engine.ops = B.OpTable(
+        name=ops.name, rsnn_cell=wrap(ops.rsnn_cell),
+        ff_matmul=wrap(ops.ff_matmul), fc=wrap(ops.fc),
+        mxu_aligned=ops.mxu_aligned,
+        megastep=wrap(ops.megastep) if ops.megastep is not None else None)
+    try:
+        state = engine.init_state(4)
+        x = jnp.zeros((4, engine.cfg.input_dim), jnp.float32)
+        jax.make_jaxpr(engine._frame_step)(state, x)
+    finally:
+        engine.ops = ops
+    return counts["n"]
+
+
+def bench_megastep():
+    """Single-dispatch mega-step (kernels/megastep.py) vs the per-op
+    tables: dispatches per frame (traced-executable count) and p50 step
+    latency for jnp / pallas / fused on the same packed CSC int4 model.
+
+    The dispatch count is the structural claim — the ``fused`` backend
+    collapses the whole frame step (both cells, stimulus matmuls, the
+    zero-skip FC, the sparsity counters) into ONE kernel call per frame
+    (per frame-chunk), where the per-op tables issue one per op.
+    """
+    from repro.core.compression.compress import (CompressionConfig,
+                                                 PruneSpec, init_compression)
+    from repro.serving.stream import CompiledRSNN, EngineConfig
+
+    cfg = RSNNConfig(input_dim=20, hidden_dim=64, fc_dim=192, num_ts=2)
+    params = rsnn.init_params(jax.random.PRNGKey(0), cfg)
+    spec = PruneSpec(kind="nm", n=2, m=4, layout="csc")
+    ccfg = CompressionConfig(weight_bits=4, prune_specs=(("fc_w", spec),))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, cfg.input_dim))
+
+    per_backend = {}
+    for backend in ("jnp", "pallas", "fused"):
+        engine = CompiledRSNN(
+            cfg, params,
+            EngineConfig(backend=backend, precision="int4", sparse_fc=True,
+                         input_scale=0.05),
+            ccfg=ccfg, cstate=init_compression(params, ccfg))
+        dispatches = _frame_dispatches(engine)
+        state = engine.init_state(4)
+        xq = engine.quantize_features(x)
+
+        def step(xq):
+            return engine.step(state, xq)
+
+        step(xq)  # compile
+        samples = []
+        for _ in range(30):
+            t0 = time.perf_counter()
+            out = step(xq)
+            jax.block_until_ready(out)
+            samples.append((time.perf_counter() - t0) * 1e6)
+        samples.sort()
+        per_backend[backend] = {
+            "dispatches_per_frame": dispatches,
+            "p50_us": round(samples[len(samples) // 2], 2),
+        }
+
+    us = per_backend["fused"]["p50_us"]
+    return us, {
+        **per_backend,
+        "dispatch_collapse":
+            f"{per_backend['jnp']['dispatches_per_frame']} -> "
+            f"{per_backend['fused']['dispatches_per_frame']} per frame",
+    }

@@ -35,7 +35,8 @@ TIMED = (("bench_rsnn_forward", "bench_rsnn_forward"),
          ("bench_stream_engine", "bench_stream_engine"),
          ("bench_stream_sharded", "bench_stream_sharded"),
          ("bench_stream_pipeline", "bench_stream_pipeline"),
-         ("bench_artifact_roundtrip", "bench_artifact_roundtrip"))
+         ("bench_artifact_roundtrip", "bench_artifact_roundtrip"),
+         ("bench_megastep", "bench_megastep"))
 
 
 def _emit(name: str, us: float, derived) -> None:

@@ -13,9 +13,11 @@ Subcommands::
         [--baseline BENCH_6.json] [--threshold 0.5] [--strict]
     python -m benchmarks.trajectory show
 
-``compare`` matches cells by identity key (``slots/depth/layout/mesh``)
-and flags a regression when a latency percentile rises — or saturation/
-throughput falls — by more than ``--threshold`` (relative).  Latency is
+``compare`` matches cells by identity tuple (``slots/depth/layout/
+backend/mesh``; a schema-v1 cell's backend defaults to ``jnp``, so v2
+docs diff cleanly against the v1 ``BENCH_6.json``) and flags a regression
+when a latency percentile rises — or saturation/throughput falls — by
+more than ``--threshold`` (relative).  Latency is
 machine-dependent: when the two files carry different machine
 fingerprints or workload identities the comparison is *informational*
 (printed, exit 0) unless ``--strict`` forces enforcement; same-machine
@@ -33,7 +35,8 @@ from pathlib import Path
 
 ROOT = Path(__file__).resolve().parents[1]
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2  # v2 (BENCH_7+): cells carry a "backend" identity axis
+SUPPORTED_SCHEMA_VERSIONS = (1, 2)
 
 BENCH_NAME = re.compile(r"^BENCH_(\d+)\.json$")
 
@@ -93,18 +96,21 @@ def validate_doc(doc) -> list[str]:
             errors.append(f"{key!r} must be {typ}, got {type(doc[key])}")
     if errors:
         return errors
-    if doc["schema_version"] != SCHEMA_VERSION:
-        errors.append(f"schema_version {doc['schema_version']} != supported "
-                      f"{SCHEMA_VERSION}")
+    if doc["schema_version"] not in SUPPORTED_SCHEMA_VERSIONS:
+        errors.append(f"schema_version {doc['schema_version']} not in "
+                      f"supported {SUPPORTED_SCHEMA_VERSIONS}")
     if not doc["cells"]:
         errors.append("cells is empty")
+    required_cell = dict(_REQUIRED_CELL)
+    if doc["schema_version"] >= 2:
+        required_cell["backend"] = str  # the v2 identity axis
     seen = set()
     for i, cell in enumerate(doc["cells"]):
         where = f"cells[{i}]"
         if not isinstance(cell, dict):
             errors.append(f"{where} is not an object")
             continue
-        for key, typ in _REQUIRED_CELL.items():
+        for key, typ in required_cell.items():
             if key not in cell:
                 errors.append(f"{where} missing {key!r}")
             elif not isinstance(cell[key], typ):
@@ -160,6 +166,24 @@ def _get(cell: dict, path: tuple):
     return float(v)
 
 
+def _cell_identity(cell: dict) -> tuple:
+    """The sweep coordinates a cell is matched on across schema versions.
+
+    A v1 cell predates the backend axis; it was always served by the
+    ``jnp`` backend, so it defaults there — a v2 run's jnp cells line up
+    against the v1 baseline and the other backends show up as new cells.
+    """
+    return (cell["slots"], cell["pipeline_depth"], cell["layout"],
+            cell.get("backend", "jnp"), cell["mesh"])
+
+
+def _model_identity(doc: dict) -> dict:
+    """Model identity for comparability: v1 docs carried the backend in
+    the model dict, v2 moved it into the cells — strip it so the axis
+    move doesn't break enforcement against older baselines."""
+    return {k: v for k, v in doc["model"].items() if k != "backend"}
+
+
 def compare_docs(new: dict, base: dict, threshold: float) -> dict:
     """Cell-by-cell diff -> {comparable, regressions, improvements, lines}.
 
@@ -169,12 +193,12 @@ def compare_docs(new: dict, base: dict, threshold: float) -> dict:
     """
     fp_match = new["machine"] == base["machine"]
     wl_match = (new["workload"] == base["workload"]
-                and new["model"] == base["model"])
-    base_cells = {c["key"]: c for c in base["cells"]}
+                and _model_identity(new) == _model_identity(base))
+    base_cells = {_cell_identity(c): c for c in base["cells"]}
     lines, regressions, improvements = [], [], []
     matched = 0
     for cell in new["cells"]:
-        b = base_cells.get(cell["key"])
+        b = base_cells.get(_cell_identity(cell))
         if b is None:
             lines.append(f"  {cell['key']}: new cell (no baseline)")
             continue
@@ -196,9 +220,10 @@ def compare_docs(new: dict, base: dict, threshold: float) -> dict:
                 improvements.append(f"{cell['key']}.{name}")
             lines.append(f"  {cell['key']}.{name}: {old_v:g} -> {new_v:g}"
                          f" ({(new_v - old_v) / old_v:+.0%}){tag}")
-    unmatched = sorted(set(base_cells) - {c["key"] for c in new["cells"]})
-    for key in unmatched:
-        lines.append(f"  {key}: dropped from new run")
+    new_ids = {_cell_identity(c) for c in new["cells"]}
+    for ident, b in sorted(base_cells.items(), key=lambda kv: kv[1]["key"]):
+        if ident not in new_ids:
+            lines.append(f"  {b['key']}: dropped from new run")
     return {"comparable": fp_match and wl_match,
             "fingerprint_match": fp_match,
             "workload_match": wl_match,

@@ -79,6 +79,18 @@ class WeightLayout(abc.ABC):
     def fc_kernel(self, spikes_ts: jax.Array, t) -> jax.Array:
         """Fused Pallas merged-spike readout (interpret mode on CPU)."""
 
+    def megastep_fc(self, t) -> tuple[str, tuple, dict]:
+        """Operand binding for the single-dispatch mega-step kernel's FC
+        stage (``kernels/megastep.py``): ``(fc_mode, operands, statics)``
+        where ``fc_mode`` selects the in-kernel readout branch,
+        ``operands`` are the arrays handed to the kernel, and ``statics``
+        are extra static kwargs (e.g. the N:M group shape).  Layouts
+        without a mega-step branch leave the default, which keeps the
+        ``fused`` backend unavailable for tensors they pack."""
+        raise NotImplementedError(
+            f"layout {self.name!r} has no mega-step FC binding; the "
+            f"'fused' backend cannot serve this packed tensor")
+
     # ------------------------------------------------------ size accounting
 
     @abc.abstractmethod

@@ -120,6 +120,9 @@ class SparseColumnsLayout(base.WeightLayout):
 
         return ops.sparse_fc(spikes_ts, t.indices, t.values, t.scale)
 
+    def megastep_fc(self, t: SparseColumns) -> tuple[str, tuple, dict]:
+        return "csc", (t.indices, t.values, t.scale), {}
+
     def stored_entries(self, t: SparseColumns) -> float:
         return csc_stored_entries(t)
 

@@ -53,6 +53,9 @@ class DenseInt4Layout(base.WeightLayout):
 
         return ops.merged_spike_fc(spikes_ts, t.packed, t.scale.reshape(-1))
 
+    def megastep_fc(self, t: QuantTensor) -> tuple[str, tuple, dict]:
+        return "dense_int4", (t.packed, t.scale), {}
+
     def stored_entries(self, t: QuantTensor) -> float:
         return float(t.packed.shape[0] * 2 * t.packed.shape[1])
 

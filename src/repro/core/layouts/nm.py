@@ -175,6 +175,9 @@ class NMGroupPackedLayout(base.WeightLayout):
 
         return ops.nm_fc(spikes_ts, t.packed, t.scale, n=t.n, m=t.m)
 
+    def megastep_fc(self, t: NMGroupPacked) -> tuple[str, tuple, dict]:
+        return "nm", (t.packed, t.scale), {"nm_n": t.n, "nm_m": t.m}
+
     def stored_entries(self, t: NMGroupPacked) -> float:
         return float(np.asarray(t.count).sum())
 

@@ -1,0 +1,230 @@
+"""Pallas TPU kernel: the whole RSNN frame step in ONE dispatch.
+
+``kernels/rsnn_cell.py`` fuses one recurrent layer; the engine still
+crossed layer boundaries through HBM — each frame was one jitted step but
+internally three op-table calls (l0 cell -> l1 cell -> layout-resolved
+FC), each a separate kernel dispatch re-fetching weights and state.  The
+packed model is 0.1 MB and the slot batch's recurrent state a few KB, so
+*everything* fits in VMEM at once.  This kernel is the paper's
+whole-network-per-frame pass as one ``pallas_call``:
+
+  * l0 recurrent-spiking cell across all ``num_ts`` time steps (TS folded
+    into the matmul M dim — one recurrent-weight fetch serves every time
+    step, the paper's parallel-time-step trick);
+  * l1 cell, consuming l0's spikes straight from registers/VMEM;
+  * the layout-resolved zero-skip FC readout — dense int4, padded CSC, or
+    group-packed N:M, selected by the static ``fc_mode`` that the packed
+    FC tensor's ``WeightLayout.megastep_fc`` binding resolved;
+  * the per-slot sparsity counters (L0/L1 spike counts, merged-spike
+    union, input one-bits) as aux outputs of the same dispatch.
+
+Weights ride in VMEM in their *packed* form (int4 nibbles for the layer
+matrices, the layout tensor for the FC) and dequantize next to the MACs;
+membrane/spike state stays resident across the whole step and — via the
+static ``frames`` axis — across an F-frame chunk (one weight fetch serves
+F frames x TS time steps; the software echo of EdgeDRNN keeping RNN state
+next to the datapath).
+
+Bit-identity contract: every float op matches the ``jnp`` backend's
+composition exactly (same dots, same LIF order, same gather/scale order
+per layout), so the ``fused`` backend is bit-identical to ``jnp`` at every
+loop contract — proven by ``tests/test_megastep.py`` against
+``kernels/ref.megastep_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# operand count per FC mode (after the 11 common + weight refs)
+_FC_OPERANDS = {"dense_float": 1, "dense_int4": 2, "csc": 3, "nm": 2}
+
+
+def _dequant(q_ref, scale_ref) -> jax.Array:
+    """In-kernel int4 nibble dequant: (K//2, N) int8 pairs -> (K, N) f32.
+
+    Bit-exact with ``compression.quantization.unpack_int4`` followed by the
+    per-channel scale (``layouts.dense.dequantize``) — the weights stay
+    4-bit in VMEM and widen next to the MACs.
+    """
+    p = q_ref[...]
+    lo = (p & 0xF).astype(jnp.int8)
+    hi = ((p >> 4) & 0xF).astype(jnp.int8)
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    k2, n = p.shape
+    w = jnp.stack([lo, hi], axis=1).reshape(k2 * 2, n)
+    return w.astype(jnp.float32) * scale_ref[...]
+
+
+def _lif_chain(stim, u, h, beta, vth, num_ts: int):
+    """The sequential LIF membrane chain (paper Eq. 2-3), exactly
+    ``ref.rsnn_cell_ref``'s epilogue."""
+    spikes = []
+    for t in range(num_ts):
+        u = stim[t] + beta * u * (1.0 - h)
+        h = (u >= vth).astype(jnp.float32)
+        spikes.append(h)
+    return jnp.stack(spikes), u
+
+
+def _fc_readout(merged, fc_refs, *, fc_mode: str, nm_n: int, nm_m: int):
+    """Layout-resolved zero-skip FC over the merged spikes (B, H).
+
+    Each branch replicates its layout's jnp oracle op-for-op:
+    ``dense_float`` = ``spike_ops.merged_spike_fc``, ``dense_int4`` =
+    ``ref.int4_matmul_ref``, ``csc`` = ``layouts.csc.sparse_matmul``,
+    ``nm`` = ``layouts.nm.nm_matmul`` (gather, multiply, sum over the
+    entry axis, then scale — the order that makes CSC and N:M agree
+    bitwise on the same mask).
+    """
+    b = merged.shape[0]
+    if fc_mode == "dense_float":
+        return jnp.dot(merged, fc_refs[0][...],
+                       preferred_element_type=jnp.float32)
+    if fc_mode == "dense_int4":
+        return jnp.dot(merged, _dequant(fc_refs[0], fc_refs[1]),
+                       preferred_element_type=jnp.float32)
+    if fc_mode == "csc":
+        idx = fc_refs[0][...]  # (nnz_max, FC) int32 surviving rows
+        val = fc_refs[1][...]  # (nnz_max, FC) f32 int4 values
+        scale = fc_refs[2][...]  # (1, FC)
+        nnz, fc_dim = idx.shape
+        xg = jnp.take(merged, idx.reshape(-1), axis=1).reshape(b, nnz, fc_dim)
+        return (xg * val).sum(axis=1) * scale
+    if fc_mode == "nm":
+        p = fc_refs[0][...]  # (E, FC) int8: value | offset << 4
+        scale = fc_refs[1][...]  # (1, FC)
+        val = (p & 0xF).astype(jnp.int8)
+        val = jnp.where(val >= 8, val - 16, val).astype(jnp.float32)
+        off = ((p >> 4) & 0xF).astype(jnp.int32)
+        e, fc_dim = p.shape
+        # implicit group indexing: entry e belongs to group e // n, global
+        # row = group * m + offset (2-D iota: 1-D iota fails on TPU)
+        group = jax.lax.broadcasted_iota(jnp.int32, (e, 1), 0) // nm_n
+        idx = group * nm_m + off
+        xg = jnp.take(merged, idx.reshape(-1), axis=1).reshape(b, e, fc_dim)
+        return (xg * val).sum(axis=1) * scale
+    raise ValueError(f"unknown fc_mode {fc_mode!r}")
+
+
+def _megastep_kernel(*refs, num_ts: int, frames: int, precision: str,
+                     fc_mode: str, nm_n: int, nm_m: int, input_bits: int):
+    (x_ref, s0_ref, u0_ref, h0_ref, s1_ref, u1_ref, h1_ref,
+     beta0_ref, vth0_ref, beta1_ref, vth1_ref) = refs[:11]
+    nw = 8 if precision == "int4" else 4
+    w_refs = refs[11:11 + nw]
+    fc_refs = refs[11 + nw:11 + nw + _FC_OPERANDS[fc_mode]]
+    (s0_out, u0_out, s1_out, u1_out, logits_out,
+     sp0_out, sp1_out, union_out, bits_out) = refs[11 + nw + _FC_OPERANDS[fc_mode]:]
+
+    # --- weights: fetched/dequantized ONCE for the whole F-frame chunk ----
+    if precision == "int4":
+        w0x = _dequant(w_refs[0], w_refs[1])
+        w0h = _dequant(w_refs[2], w_refs[3])
+        w1x = _dequant(w_refs[4], w_refs[5])
+        w1h = _dequant(w_refs[6], w_refs[7])
+    else:
+        w0x, w0h, w1x, w1h = (r[...] for r in w_refs)
+    beta0 = beta0_ref[...].astype(jnp.float32)
+    vth0 = vth0_ref[...].astype(jnp.float32)
+    beta1 = beta1_ref[...].astype(jnp.float32)
+    vth1 = vth1_ref[...].astype(jnp.float32)
+
+    # --- recurrent state: VMEM-resident across the whole chunk ------------
+    s0 = s0_ref[...].astype(jnp.float32)
+    u0 = u0_ref[...].astype(jnp.float32)
+    h0 = h0_ref[...].astype(jnp.float32)
+    s1 = s1_ref[...].astype(jnp.float32)
+    u1 = u1_ref[...].astype(jnp.float32)
+    h1 = h1_ref[...].astype(jnp.float32)
+    b = u0.shape[0]
+    h = u0.shape[1]
+
+    for f in range(frames):
+        x = x_ref[f].astype(jnp.float32)  # (B, input_dim)
+        # L0: feedforward stimulus once per frame, shared across time
+        # steps; recurrent matmul with TS folded into M (one W fetch)
+        ff0 = jnp.dot(x, w0x, preferred_element_type=jnp.float32)
+        rec0 = jnp.dot(s0.reshape(num_ts * b, h), w0h,
+                       preferred_element_type=jnp.float32)
+        stim0 = jnp.broadcast_to(ff0[None], (num_ts, b, h)) \
+            + rec0.reshape(num_ts, b, h)
+        s0, u0 = _lif_chain(stim0, u0, h0, beta0, vth0, num_ts)
+        h0 = s0[-1]
+
+        # L1: per-ts feedforward from L0 spikes (straight from VMEM)
+        ff1 = jnp.dot(s0.reshape(num_ts * b, h), w1x,
+                      preferred_element_type=jnp.float32)
+        rec1 = jnp.dot(s1.reshape(num_ts * b, h), w1h,
+                       preferred_element_type=jnp.float32)
+        stim1 = ff1.reshape(num_ts, b, h) + rec1.reshape(num_ts, b, h)
+        s1, u1 = _lif_chain(stim1, u1, h1, beta1, vth1, num_ts)
+        h1 = s1[-1]
+
+        # merged-spike zero-skip readout (paper §II-D2)
+        merged = s1.sum(axis=0)  # (B, H) in {0..TS}
+        logits_out[f, :, :] = _fc_readout(merged, fc_refs, fc_mode=fc_mode,
+                                          nm_n=nm_n, nm_m=nm_m)
+
+        # per-slot sparsity counters: aux outputs of the same dispatch
+        # (bit-exact with serving.stream._frame_counters)
+        sp0_out[f, :, :] = s0.sum(axis=2)
+        sp1_out[f, :, :] = s1.sum(axis=2)
+        union_out[f, :] = s1.max(axis=0).sum(axis=1)
+        mag = jnp.abs(x).astype(jnp.int32)
+        shifts = jax.lax.broadcasted_iota(jnp.int32, (1, 1, input_bits), 2)
+        bits_out[f, :] = ((mag[..., None] >> shifts) & 1) \
+            .sum(axis=(1, 2)).astype(jnp.float32)
+
+    s0_out[...] = s0
+    u0_out[...] = u0
+    s1_out[...] = s1
+    u1_out[...] = u1
+
+
+@functools.partial(jax.jit, static_argnames=("precision", "fc_mode",
+                                             "input_bits", "nm_n", "nm_m",
+                                             "interpret"))
+def megastep(x, s0, u0, h0, s1, u1, h1, beta0, vth0, beta1, vth1,
+             wargs: tuple, fcargs: tuple, *, precision: str, fc_mode: str,
+             input_bits: int, nm_n: int = 0, nm_m: int = 0,
+             interpret: bool = False):
+    """Single-dispatch mega-step over an F-frame chunk.
+
+    Shapes: ``x`` (F, B, input_dim) quantized frames; ``s0``/``s1``
+    (TS, B, H) previous-frame spikes; ``u0``/``h0``/``u1``/``h1`` (B, H)
+    membrane chain carries; ``beta*/vth*`` (H,) LIF constants.
+
+    ``wargs`` holds the layer weights: dense ``(w0x, w0h, w1x, w1h)`` at
+    float precision, packed ``(q, scale)`` pairs per weight at int4.
+    ``fcargs`` holds the FC operands that the packed tensor's layout
+    binding (``WeightLayout.megastep_fc``) resolved for ``fc_mode``.
+
+    Returns ``(s0, u0, s1, u1, logits (F, B, fc_dim), spikes_l0 (F, TS, B),
+    spikes_l1 (F, TS, B), union_l1 (F, B), input_one_bits (F, B))``.
+    """
+    frames, b, _ = x.shape
+    ts, _, h = s0.shape
+    fc_dim = fcargs[0].shape[1]  # every mode's first operand is (*, fc_dim)
+    lif2 = [a.reshape(1, h) for a in (beta0, vth0, beta1, vth1)]
+    out_shape = [
+        jax.ShapeDtypeStruct((ts, b, h), jnp.float32),  # s0
+        jax.ShapeDtypeStruct((b, h), jnp.float32),  # u0
+        jax.ShapeDtypeStruct((ts, b, h), jnp.float32),  # s1
+        jax.ShapeDtypeStruct((b, h), jnp.float32),  # u1
+        jax.ShapeDtypeStruct((frames, b, fc_dim), jnp.float32),  # logits
+        jax.ShapeDtypeStruct((frames, ts, b), jnp.float32),  # spikes_l0
+        jax.ShapeDtypeStruct((frames, ts, b), jnp.float32),  # spikes_l1
+        jax.ShapeDtypeStruct((frames, b), jnp.float32),  # union_l1
+        jax.ShapeDtypeStruct((frames, b), jnp.float32),  # input_one_bits
+    ]
+    kernel = functools.partial(
+        _megastep_kernel, num_ts=ts, frames=frames, precision=precision,
+        fc_mode=fc_mode, nm_n=nm_n, nm_m=nm_m, input_bits=input_bits)
+    return pl.pallas_call(kernel, out_shape=out_shape, interpret=interpret)(
+        x, s0, u0, h0, s1, u1, h1, *lif2, *wargs, *fcargs)

@@ -9,6 +9,7 @@ from __future__ import annotations
 import jax
 
 from repro.kernels import int4_matmul as _i4
+from repro.kernels import megastep as _mega
 from repro.kernels import merged_spike_fc as _mfc
 from repro.kernels import nm_fc as _nfc
 from repro.kernels import rsnn_cell as _cell
@@ -42,3 +43,15 @@ def sparse_fc(spikes_ts, indices, values, scale, *, block_b=128, block_n=512):
 def nm_fc(spikes_ts, packed, scale, *, n, m, block_b=128, block_n=512):
     return _nfc.nm_fc(spikes_ts, packed, scale, n=n, m=m, block_b=block_b,
                       block_n=block_n, interpret=_interpret())
+
+
+def megastep(x, s0, u0, h0, s1, u1, h1, beta0, vth0, beta1, vth1,
+             wargs, fcargs, *, precision, fc_mode, input_bits,
+             nm_n=0, nm_m=0):
+    """Whole frame step (both cells + layout FC + counters) in one dispatch
+    over an F-frame chunk — see ``kernels/megastep.py``."""
+    return _mega.megastep(x, s0, u0, h0, s1, u1, h1, beta0, vth0, beta1,
+                          vth1, tuple(wargs), tuple(fcargs),
+                          precision=precision, fc_mode=fc_mode,
+                          input_bits=input_bits, nm_n=nm_n, nm_m=nm_m,
+                          interpret=_interpret())

@@ -74,6 +74,62 @@ def sparse_fc_ref(spikes_ts: jax.Array, indices: jax.Array, values: jax.Array,
     return sparse.sparse_matmul(merged, sc)
 
 
+def megastep_ref(x, s0, u0, h0, s1, u1, h1, beta0, vth0, beta1, vth1,
+                 wargs: tuple, fcargs: tuple, *, precision: str, fc_mode: str,
+                 input_bits: int, nm_n: int = 0, nm_m: int = 0):
+    """jnp oracle for ``kernels/megastep.py``: the whole frame step — both
+    recurrent cells, the layout-resolved zero-skip FC, and the sparsity
+    counters — composed from the per-op oracles above, over an F-frame
+    chunk.  Same operand convention and output tuple as the kernel:
+
+    ``x`` (F, B, D); state carries ``s0``/``s1`` (TS, B, H) and
+    ``u*``/``h*`` (B, H); ``wargs`` = dense ``(w0x, w0h, w1x, w1h)`` at
+    float or packed ``(q, scale)`` pairs at int4; ``fcargs`` per
+    ``fc_mode`` (``dense_float``/``dense_int4``/``csc``/``nm``).
+
+    Returns ``(s0, u0, s1, u1, logits (F, B, FC), spikes_l0 (F, TS, B),
+    spikes_l1 (F, TS, B), union_l1 (F, B), input_one_bits (F, B))``.
+    """
+    from repro.core import spike_ops  # deferred: keep this oracle module light
+
+    if precision == "int4":
+        w0x = unpack_int4_ref(wargs[0]).astype(jnp.float32) * wargs[1]
+        w0h = unpack_int4_ref(wargs[2]).astype(jnp.float32) * wargs[3]
+        w1x = unpack_int4_ref(wargs[4]).astype(jnp.float32) * wargs[5]
+        w1h = unpack_int4_ref(wargs[6]).astype(jnp.float32) * wargs[7]
+    else:
+        w0x, w0h, w1x, w1h = wargs
+    ts, b, h = s0.shape
+    logits, sp0, sp1, union, bits = [], [], [], [], []
+    for f in range(x.shape[0]):
+        xf = x[f].astype(jnp.float32)
+        stim0 = jnp.broadcast_to((xf @ w0x)[None], (ts, b, h))
+        s0, u0 = rsnn_cell_ref(stim0, s0, w0h, u0, h0, beta0, vth0)
+        h0 = s0[-1]
+        stim1 = (s0.reshape(ts * b, h) @ w1x).reshape(ts, b, h)
+        s1, u1 = rsnn_cell_ref(stim1, s1, w1h, u1, h1, beta1, vth1)
+        h1 = s1[-1]
+        if fc_mode == "dense_float":
+            logits.append(s1.sum(axis=0) @ fcargs[0])
+        elif fc_mode == "dense_int4":
+            logits.append(merged_spike_fc_ref(s1, fcargs[0],
+                                              fcargs[1].reshape(-1)))
+        elif fc_mode == "csc":
+            logits.append(sparse_fc_ref(s1, *fcargs))
+        elif fc_mode == "nm":
+            logits.append(nm_fc_ref(s1, fcargs[0], fcargs[1],
+                                    n=nm_n, m=nm_m))
+        else:
+            raise ValueError(f"unknown fc_mode {fc_mode!r}")
+        sp0.append(s0.sum(axis=2))
+        sp1.append(s1.sum(axis=2))
+        union.append(s1.max(axis=0).sum(axis=1))
+        bits.append(spike_ops.bitplanes(xf, input_bits)
+                    .sum(axis=(1, 2)).astype(jnp.float32))
+    return (s0, u0, s1, u1, jnp.stack(logits), jnp.stack(sp0),
+            jnp.stack(sp1), jnp.stack(union), jnp.stack(bits))
+
+
 def nm_fc_ref(spikes_ts: jax.Array, packed: jax.Array, scale: jax.Array, *,
               n: int, m: int) -> jax.Array:
     """Zero-skip FC over the group-packed N:M layout: the merged-spike

@@ -28,6 +28,12 @@ Built-in backends:
   ``sparse``               — ``pallas`` cells/stimulus plus the packed FC
       layout's fused zero-skip kernel (``kernels/sparse_fc`` for CSC,
       ``kernels/nm_fc`` for N:M-group).
+  ``fused``                — the single-dispatch mega-step: the op table
+      collapses to one ``megastep`` call (``kernels/megastep.py``) that
+      runs both cells, the layout-resolved zero-skip FC (bound via each
+      layout's ``megastep_fc``), and the sparsity counters in one Pallas
+      dispatch with state and packed weights resident in VMEM.
+      Bit-identical to ``jnp`` at every loop contract.
 
 New kernels plug in via ``register`` without touching the engine: the
 engine resolves a table once at construction and calls through it.
@@ -41,7 +47,8 @@ from typing import Callable, NamedTuple
 import jax
 
 from repro.core import layouts, spike_ops
-from repro.core.rsnn import RSNNConfig
+from repro.core.lif import LIFState
+from repro.core.rsnn import RSNNConfig, RSNNState
 from repro.kernels import ops, ref
 
 
@@ -66,13 +73,20 @@ class BackendContext:
 
 
 class OpTable(NamedTuple):
-    """Uniform per-backend op set consumed by ``CompiledRSNN``."""
+    """Uniform per-backend op set consumed by ``CompiledRSNN``.
+
+    ``megastep``, when set, supersedes the per-op fields: the engine's
+    frame step becomes that one call — ``(state, x_t, lif) -> (new_state,
+    logits, aux)`` with ``aux`` matching ``stream._frame_counters`` — and
+    the per-op entries are never invoked.
+    """
 
     name: str
     rsnn_cell: Callable  # (stim, s_prev, w, u0, h0, beta, vth) -> (s, u)
     ff_matmul: Callable  # (x2d (M, K), layer_name) -> (M, N)
     fc: Callable  # (spikes_ts (TS, B, H)) -> (B, fc_dim)
     mxu_aligned: bool  # True: batch must satisfy the 128-row MXU tiling
+    megastep: Callable | None = None  # whole-frame single-dispatch step
 
 
 class _Entry(NamedTuple):
@@ -193,3 +207,68 @@ def _build_sparse(ctx: BackendContext) -> OpTable:
     """Pallas cells/stimulus + the packed layout's fused zero-skip readout."""
     ctx = dataclasses.replace(ctx, sparse_fc=True)
     return _build_pallas(ctx)._replace(name="sparse")
+
+
+@register("fused")
+def _build_fused(ctx: BackendContext) -> OpTable:
+    """Single-dispatch mega-step: the op table collapses to one call.
+
+    Both cells, the layout-resolved zero-skip FC, and the sparsity
+    counters execute inside one ``kernels/megastep.py`` dispatch with the
+    packed weights and recurrent state resident in VMEM; the per-op table
+    entries are never invoked (they raise to catch accidental use).  The
+    FC operands come from the packed tensor's ``WeightLayout.megastep_fc``
+    binding, so a new layout plugs into the mega-step without a backend
+    edit.  Bit-identical to ``jnp`` (tests/test_megastep.py).
+    """
+    cfg = ctx.cfg
+    if not cfg.merged_spike:
+        raise ValueError(
+            "the 'fused' backend's mega-step kernel implements the "
+            "merged-spike readout (paper §II-D2); per-ts readout needs "
+            "another backend")
+    names = ("l0_wx", "l0_wh", "l1_wx", "l1_wh")
+    if ctx.precision == "int4":
+        # the layer weights ride into VMEM as packed nibbles + scales and
+        # dequantize next to the MACs (bit-exact with ctx.dense's copies)
+        wargs = tuple(a for n in names
+                      for a in (ctx.quant[n].packed, ctx.quant[n].scale))
+    else:
+        wargs = tuple(ctx.dense[n] for n in names)
+    if ctx.sparse_fc:
+        fct = ctx.sparse["fc_w"]
+    elif ctx.precision == "int4":
+        fct = ctx.quant["fc_w"]
+    else:
+        fct = None
+    if fct is None:
+        fc_mode, fcargs, statics = "dense_float", (ctx.dense["fc_w"],), {}
+    else:
+        fc_mode, fcargs, statics = layouts.layout_of(fct).megastep_fc(fct)
+
+    def megastep(state: RSNNState, x_t: jax.Array, lif: dict):
+        outs = ops.megastep(
+            x_t[None], state.h0, state.lif0.u, state.lif0.spike,
+            state.h1, state.lif1.u, state.lif1.spike,
+            lif["beta0"], lif["vth0"], lif["beta1"], lif["vth1"],
+            wargs, fcargs, precision=ctx.precision, fc_mode=fc_mode,
+            input_bits=cfg.input_bits, **statics)
+        s0, u0, s1, u1, logits, sp0, sp1, union, bits = outs
+        new_state = RSNNState(h0=s0, h1=s1,
+                              lif0=LIFState(u=u0, spike=s0[-1]),
+                              lif1=LIFState(u=u1, spike=s1[-1]))
+        aux = {"spikes_l0": sp0[0], "spikes_l1": sp1[0],
+               "union_l1": union[0], "input_one_bits": bits[0]}
+        return new_state, logits[0], aux
+
+    def _collapsed(op: str) -> Callable:
+        def call(*_a, **_k):
+            raise RuntimeError(
+                f"the 'fused' backend executes the whole frame step as one "
+                f"megastep dispatch; {op!r} is not separately callable")
+
+        return call
+
+    return OpTable(name="fused", rsnn_cell=_collapsed("rsnn_cell"),
+                   ff_matmul=_collapsed("ff_matmul"), fc=_collapsed("fc"),
+                   mxu_aligned=False, megastep=megastep)

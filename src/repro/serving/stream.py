@@ -315,6 +315,13 @@ class CompiledRSNN:
         backend registry resolved at construction) — the engine itself is
         backend-agnostic.
         """
+        if self.ops.megastep is not None:
+            # single-dispatch mega-step: both cells, the layout-resolved
+            # FC, and the sparsity counters run inside one kernel with
+            # state/weights VMEM-resident (kernels/megastep.py); every
+            # loop contract (v1, v2 ring, scan, sharded) funnels here, so
+            # they all inherit the collapsed dispatch
+            return self.ops.megastep(state, x_t, self._lif)
         cell, ff, fc = self.ops.rsnn_cell, self.ops.ff_matmul, self.ops.fc
         w = self._w
         lif = self._lif

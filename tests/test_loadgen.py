@@ -156,9 +156,10 @@ def _stats(p50=100.0, p99=200.0):
             "mean": p50, "max": p99}
 
 
-def _cell(key="slots2-depth0-csc-mesh1", p50=100.0, p99=200.0, sat=50.0,
-          tput=1000.0):
+def _cell(key="slots2-depth0-csc-jnp-mesh1", p50=100.0, p99=200.0, sat=50.0,
+          tput=1000.0, backend="jnp"):
     return {"key": key, "slots": 2, "pipeline_depth": 0, "layout": "csc",
+            "backend": backend,
             "mesh": 1, "streams": 8, "frames": 100,
             "frame_latency_us": _stats(p50, p99),
             "stream_completion_ms": _stats(), "queue_wait_ms": _stats(),
@@ -250,11 +251,35 @@ def test_compare_docs_cross_machine_not_comparable():
 
 
 def test_compare_docs_unmatched_cells():
-    base, new = _doc(), _doc(key="slots4-depth2-nm-mesh1")
+    # cells match on the identity tuple (slots/depth/layout/backend/mesh),
+    # so a different backend is a different cell even at equal slots/layout
+    base = _doc()
+    new = _doc(key="slots2-depth0-csc-fused-mesh1", backend="fused")
     result = trajectory.compare_docs(new, base, threshold=0.5)
     assert result["matched_cells"] == 0
     assert any("no baseline" in ln for ln in result["lines"])
     assert any("dropped" in ln for ln in result["lines"])
+
+
+def test_schema_v1_doc_still_validates_and_compares():
+    # a committed v1 baseline (no backend field anywhere in the cells)
+    # must stay readable, and its cells must match a v2 run's jnp cells
+    v1 = _doc()
+    v1["schema_version"] = 1
+    del v1["cells"][0]["backend"]
+    v1["model"]["backend"] = "jnp"  # v1 carried the backend in the model
+    assert trajectory.validate_doc(v1) == []
+
+    v2 = _doc(p50=120.0)  # +20%: matched, under the 50% threshold
+    result = trajectory.compare_docs(v2, v1, threshold=0.5)
+    assert result["matched_cells"] == 1
+    assert result["workload_match"]  # model identity ignores the v1 backend
+    assert result["regressions"] == []
+
+    # a v2 cell missing its backend is a schema error
+    bad = _doc()
+    del bad["cells"][0]["backend"]
+    assert any("backend" in e for e in trajectory.validate_doc(bad))
 
 
 def test_bench_files_numeric_order(tmp_path):

@@ -1,0 +1,294 @@
+"""Single-dispatch mega-step kernel (kernels/megastep.py) parity suite.
+
+The ``fused`` backend's contract is BIT identity with the ``jnp`` backend
+at every loop contract: the whole frame step (both recurrent cells, the
+layout-resolved zero-skip FC, the sparsity counters) collapses into one
+kernel dispatch without changing a single output bit.  Swept over
+``num_ts`` x layout x precision, through StreamLoop depth 0/2 and the
+sharded loop, plus the kernel-vs-oracle and F-chunk invariants and the
+in-kernel counter equivalence.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import rsnn
+from repro.core.compression.compress import (CompressionConfig, PruneSpec,
+                                             init_compression)
+from repro.core.rsnn import RSNNConfig
+from repro.kernels import ops, ref
+from repro.serving import backends, stream as S
+from repro.serving.sharded import ShardedStreamLoop
+
+MODES = ("float", "dense", "csc", "nm")  # precision/layout combos
+
+
+def _engine(cfg, params, backend, mode):
+    """One serving engine per sweep cell.  ``dense`` is int4 without
+    pruning; ``csc``/``nm`` store the same 2:4 mask in either layout."""
+    if mode == "float":
+        return S.CompiledRSNN(cfg, params,
+                              S.EngineConfig(backend=backend,
+                                             input_scale=0.05))
+    if mode == "dense":
+        ccfg = CompressionConfig(weight_bits=4)
+        ec = S.EngineConfig(backend=backend, precision="int4",
+                            input_scale=0.05)
+    else:
+        tag = {"csc": "csc", "nm": "nm_group"}[mode]
+        spec = PruneSpec(kind="nm", n=2, m=4, layout=tag)
+        ccfg = CompressionConfig(weight_bits=4, prune_specs=(("fc_w", spec),))
+        ec = S.EngineConfig(backend=backend, precision="int4", sparse_fc=True,
+                            input_scale=0.05)
+    return S.CompiledRSNN(cfg, params, ec, ccfg, init_compression(params,
+                                                                  ccfg))
+
+
+def _frames(cfg, n, batch, seed=3):
+    rng = np.random.default_rng(seed)
+    return [jnp.asarray(rng.normal(size=(batch, cfg.input_dim))
+                        .astype(np.float32)) for _ in range(n)]
+
+
+def _utterances(cfg, lens, seed=7):
+    rng = np.random.default_rng(seed)
+    return [rng.normal(size=(t, cfg.input_dim)).astype(np.float32)
+            for t in lens]
+
+
+def _assert_tree_equal(a, b):
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# --------------------------------------------------- step-level bit identity
+
+
+@pytest.mark.parametrize("num_ts", [1, 2])
+@pytest.mark.parametrize("mode", MODES)
+def test_fused_step_bit_identical_to_jnp(num_ts, mode, rng_key):
+    """Logits, carried state, AND the in-kernel aux counters match the jnp
+    backend bitwise, frame after frame."""
+    cfg = RSNNConfig(input_dim=8, hidden_dim=16, fc_dim=12, num_ts=num_ts)
+    params = rsnn.init_params(rng_key, cfg)
+    ej = _engine(cfg, params, "jnp", mode)
+    ef = _engine(cfg, params, "fused", mode)
+    stj, stf = ej.init_state(3), ef.init_state(3)
+    for x in _frames(cfg, 5, 3):
+        xq = ej.quantize_features(x)
+        stj, lj, aj = ej.step(stj, xq)
+        stf, lf, af = ef.step(stf, xq)
+        np.testing.assert_array_equal(np.asarray(lj), np.asarray(lf))
+        _assert_tree_equal(stj, stf)
+        assert sorted(aj) == sorted(af)
+        for k in aj:
+            np.testing.assert_array_equal(np.asarray(aj[k]),
+                                          np.asarray(af[k]))
+
+
+def test_in_kernel_counters_match_host_accumulation(small_cfg, rng_key):
+    """The aux counters the kernel emits == ``_frame_counters`` recomputed
+    on the host from the kernel's own state outputs (in-kernel vs
+    host-accumulated equivalence)."""
+    params = rsnn.init_params(rng_key, small_cfg)
+    ef = _engine(small_cfg, params, "fused", "csc")
+    st = ef.init_state(2)
+    for x in _frames(small_cfg, 4, 2):
+        xq = ef.quantize_features(x)
+        st, _, aux = ef.step(st, xq)
+        host = S._frame_counters(xq, st.h0, st.h1, small_cfg.input_bits)
+        assert sorted(aux) == sorted(host)
+        for k in host:
+            np.testing.assert_array_equal(np.asarray(aux[k]),
+                                          np.asarray(host[k]))
+
+
+# ------------------------------------------------------ kernel-level parity
+
+
+def _kernel_operands(cfg, rng_key, batch, mode):
+    """Raw operand tuple for ops.megastep/ref.megastep_ref, lifted from a
+    built engine's resolved context (so packing is the deployed packing)."""
+    params = rsnn.init_params(rng_key, cfg)
+    eng = _engine(cfg, params, "jnp", mode)
+    ctx = eng._ctx
+    names = ("l0_wx", "l0_wh", "l1_wx", "l1_wh")
+    if ctx.precision == "int4":
+        precision = "int4"
+        wargs = tuple(a for n in names
+                      for a in (ctx.quant[n].packed, ctx.quant[n].scale))
+    else:
+        precision = "float"
+        wargs = tuple(ctx.dense[n] for n in names)
+    if mode == "float":
+        fc_mode, fcargs, statics = "dense_float", (ctx.dense["fc_w"],), {}
+    elif mode == "dense":
+        qt = ctx.quant["fc_w"]
+        fc_mode, fcargs, statics = "dense_int4", (qt.packed, qt.scale), {}
+    elif mode == "csc":
+        t = ctx.sparse["fc_w"]
+        fc_mode, fcargs, statics = "csc", (t.indices, t.values, t.scale), {}
+    else:
+        t = ctx.sparse["fc_w"]
+        fc_mode = "nm"
+        fcargs, statics = (t.packed, t.scale), {"nm_n": t.n, "nm_m": t.m}
+    state = eng.init_state(batch)
+    lifc = tuple(eng._lif[k] for k in ("beta0", "vth0", "beta1", "vth1"))
+    return (state, lifc, wargs, fcargs,
+            dict(precision=precision, fc_mode=fc_mode,
+                 input_bits=cfg.input_bits, **statics))
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_kernel_matches_jnp_oracle(small_cfg, rng_key, mode):
+    """ops.megastep (the Pallas kernel) == ref.megastep_ref bitwise over a
+    multi-frame chunk, every FC mode."""
+    state, lifc, wargs, fcargs, kw = _kernel_operands(small_cfg, rng_key,
+                                                      3, mode)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(np.round(8 * rng.normal(size=(4, 3, small_cfg.input_dim)))
+                    .astype(np.float32))
+    args = (x, state.h0, state.lif0.u, state.lif0.spike,
+            state.h1, state.lif1.u, state.lif1.spike, *lifc, wargs, fcargs)
+    out_k = ops.megastep(*args, **kw)
+    out_r = ref.megastep_ref(*args, **kw)
+    assert len(out_k) == len(out_r) == 9
+    for a, b in zip(out_k, out_r):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_chunked_megastep_matches_stepwise(small_cfg, rng_key):
+    """An F=4 chunk == 4 sequential F=1 dispatches bitwise: VMEM-resident
+    state across the chunk changes nothing but the dispatch count."""
+    state, lifc, wargs, fcargs, kw = _kernel_operands(small_cfg, rng_key,
+                                                      2, "nm")
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(np.round(8 * rng.normal(size=(4, 2, small_cfg.input_dim)))
+                    .astype(np.float32))
+    chunk = ops.megastep(x, state.h0, state.lif0.u, state.lif0.spike,
+                         state.h1, state.lif1.u, state.lif1.spike, *lifc,
+                         wargs, fcargs, **kw)
+    s0, u0, h0 = state.h0, state.lif0.u, state.lif0.spike
+    s1, u1, h1 = state.h1, state.lif1.u, state.lif1.spike
+    per_frame = []
+    for f in range(4):
+        out = ops.megastep(x[f:f + 1], s0, u0, h0, s1, u1, h1, *lifc,
+                           wargs, fcargs, **kw)
+        s0, u0, s1, u1 = out[0], out[1], out[2], out[3]
+        h0, h1 = s0[-1], s1[-1]
+        per_frame.append(out[4:])
+    for a, b in zip(chunk[:4], (s0, u0, s1, u1)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for i, name in enumerate(["logits", "sp0", "sp1", "union", "bits"]):
+        stacked = np.concatenate([np.asarray(pf[i]) for pf in per_frame])
+        np.testing.assert_array_equal(np.asarray(chunk[4 + i]), stacked,
+                                      err_msg=name)
+
+
+# ------------------------------------------------------- loop-contract parity
+
+
+@pytest.mark.parametrize("depth", [0, 2])
+def test_streamloop_fused_matches_jnp(small_cfg, rng_key, depth):
+    """StreamLoop at both step contracts (v1 sync, v2 pipelined ring):
+    fused serves every stream bit-identically to jnp, counters included."""
+    params = rsnn.init_params(rng_key, small_cfg)
+    utts = _utterances(small_cfg, [5, 9, 3, 7, 6])
+    done, counters = {}, {}
+    for backend in ("jnp", "fused"):
+        eng = _engine(small_cfg, params, backend, "nm")
+        loop = S.StreamLoop(eng, batch_slots=2, pipeline_depth=depth,
+                            ring_frames=16)
+        for u in utts:
+            loop.submit(u)
+        done[backend] = loop.run()
+        counters[backend] = loop.counters
+    assert [r.sid for r in done["fused"]] == [r.sid for r in done["jnp"]]
+    for a, b in zip(done["jnp"], done["fused"]):
+        np.testing.assert_array_equal(a.stacked_logits(), b.stacked_logits())
+    cj, cf = counters["jnp"], counters["fused"]
+    assert cf.frames == cj.frames
+    np.testing.assert_array_equal(np.asarray(cf.spikes_l0),
+                                  np.asarray(cj.spikes_l0))
+    np.testing.assert_array_equal(np.asarray(cf.union_l1),
+                                  np.asarray(cj.union_l1))
+    np.testing.assert_array_equal(np.asarray(cf.input_one_bits),
+                                  np.asarray(cj.input_one_bits))
+
+
+@pytest.mark.parametrize("depth", [0, 2])
+def test_sharded_loop_fused_matches_jnp(small_cfg, rng_key, depth):
+    """ShardedStreamLoop (mesh data path, replicated weights via
+    place_weights re-resolution): fused == jnp bitwise at both depths."""
+    params = rsnn.init_params(rng_key, small_cfg)
+    utts = _utterances(small_cfg, [5, 9, 3, 7])
+    done = {}
+    for backend in ("jnp", "fused"):
+        eng = _engine(small_cfg, params, backend, "csc")
+        loop = ShardedStreamLoop(eng, batch_slots=2, max_frames=16,
+                                 pipeline_depth=depth, ring_frames=16)
+        for u in utts:
+            loop.submit(u)
+        done[backend] = loop.run()
+    assert [r.sid for r in done["fused"]] == [r.sid for r in done["jnp"]]
+    for a, b in zip(done["jnp"], done["fused"]):
+        np.testing.assert_array_equal(a.stacked_logits(), b.stacked_logits())
+
+
+def test_run_scan_contract_fused_matches_jnp(small_cfg, rng_key):
+    """The batch ``run`` path (lax.scan over frames) also funnels through
+    the mega-step: logits and per-frame aux match jnp bitwise."""
+    params = rsnn.init_params(rng_key, small_cfg)
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(2, 6, small_cfg.input_dim))
+                    .astype(np.float32))
+    ej = _engine(small_cfg, params, "jnp", "dense")
+    ef = _engine(small_cfg, params, "fused", "dense")
+    lj, _, aj = ej.run(x)
+    lf, _, af = ef.run(x)
+    np.testing.assert_array_equal(np.asarray(lj), np.asarray(lf))
+    for k in aj:
+        np.testing.assert_array_equal(np.asarray(aj[k]), np.asarray(af[k]))
+
+
+# ----------------------------------------------------------- table contract
+
+
+def test_fused_table_collapses_to_one_call(small_cfg, rng_key):
+    """The fused op table is megastep-only: the per-op entries raise, and
+    the backend is registered/discoverable like any other."""
+    assert "fused" in backends.available()
+    params = rsnn.init_params(rng_key, small_cfg)
+    eng = _engine(small_cfg, params, "fused", "csc")
+    assert eng.ops.megastep is not None
+    assert not eng.ops.mxu_aligned
+    for op in (eng.ops.rsnn_cell, eng.ops.ff_matmul, eng.ops.fc):
+        with pytest.raises(RuntimeError, match="one|megastep"):
+            op()
+
+
+def test_fused_requires_merged_spike(rng_key):
+    cfg = RSNNConfig(input_dim=8, hidden_dim=16, fc_dim=12, num_ts=2,
+                     merged_spike=False)
+    params = rsnn.init_params(rng_key, cfg)
+    with pytest.raises(ValueError, match="merged"):
+        S.CompiledRSNN(cfg, params,
+                       S.EngineConfig(backend="fused", input_scale=0.05))
+
+
+def test_layout_without_binding_is_rejected():
+    """A layout that doesn't implement megastep_fc produces a clear error
+    instead of a silent fall-through."""
+    from repro.core.layouts import base as L
+
+    class Opaque(L.WeightLayout):
+        name = "opaque-test"
+        tensor_type = tuple
+        pack = unpack = matmul = fc_kernel = None
+        stored_entries = size_bytes = flatten = unflatten = None
+
+    with pytest.raises(NotImplementedError, match="mega-step"):
+        Opaque.megastep_fc(Opaque, object())
