@@ -37,7 +37,7 @@ Harness shape
 
 Results are written as a schema-versioned ``BENCH_<n>.json`` (machine
 fingerprint, git SHA, per-cell stats over the ``{slots x pipeline_depth x
-layout(csc,nm) x backend(jnp,pallas,fused) x mesh}`` sweep, measured
+layout(csc,nm) x backend(jnp,pallas,fused,delta) x mesh}`` sweep, measured
 sparsity from the live ``SparsityCounters``) — the persisted perf
 trajectory that ``benchmarks/trajectory.py compare`` diffs across PRs.
 The backend axis (schema v2) puts the single-dispatch mega-step
@@ -47,7 +47,7 @@ identity, so v2 docs stay comparable against the v1 ``BENCH_6.json``.
 
 CLI::
 
-    python -m benchmarks.loadgen --smoke            # tiny CI sweep -> BENCH_7.json
+    python -m benchmarks.loadgen --smoke            # tiny CI sweep -> BENCH_8.json
     python -m benchmarks.loadgen --slots 1,4 --depths 0,2 --layouts csc,nm \
         --backends jnp,fused
     python -m benchmarks.trajectory compare BENCH_new.json   # then diff it
@@ -83,10 +83,10 @@ from repro.serving.sharded import ShardedStreamLoop, stream_mesh  # noqa: E402
 from repro.serving.stream import (CompiledRSNN, EngineConfig,  # noqa: E402
                                   StreamLoop)
 
-BENCH_INDEX = 7  # this PR's trajectory point: BENCH_7.json
+BENCH_INDEX = 8  # this PR's trajectory point: BENCH_8.json
 INPUT_SCALE = 0.05  # static 8-bit calibration used across the benches
 LAYOUT_TAGS = {"csc": "csc", "nm": "nm_group"}
-BACKENDS = ("jnp", "pallas", "fused")  # sweepable engine backends
+BACKENDS = ("jnp", "pallas", "fused", "delta")  # sweepable engine backends
 
 
 # ------------------------------------------------------------- percentiles
@@ -386,7 +386,8 @@ def _sparsity_dict(loop: StreamLoop) -> dict:
     return {"input_bit_density": round(prof.input_bit_density, 4),
             "l0_density": [round(d, 4) for d in prof.l0_density],
             "l1_density": [round(d, 4) for d in prof.l1_density],
-            "fc_union_density": round(prof.fc_union_density, 4)}
+            "fc_union_density": round(prof.fc_union_density, 4),
+            "delta_input_density": round(prof.delta_input_density, 4)}
 
 
 def run_cell(engine: CompiledRSNN, layout: str, backend: str, slots: int,
@@ -522,7 +523,7 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI sweep: 2 slots, depths {0,2}, csc+nm, "
-                         "jnp+fused, mesh 1, small model")
+                         "jnp+fused+delta, mesh 1, small model")
     ap.add_argument("--out", default=str(ROOT / f"BENCH_{BENCH_INDEX}.json"))
     ap.add_argument("--slots", default="1,4")
     ap.add_argument("--depths", default="0,2")
@@ -544,7 +545,7 @@ def main(argv=None) -> int:
         cfg = RSNNConfig(input_dim=20, hidden_dim=64, fc_dim=192, num_ts=2)
         slots_list, depths, meshes = [2], [0, 2], [1]
         layouts = ["csc", "nm"]
-        backends = ["jnp", "fused"]
+        backends = ["jnp", "fused", "delta"]
         wl = Workload(seed=args.seed, num_streams=8, min_frames=8,
                       max_frames=20)
         sat_iters = 1

@@ -582,3 +582,87 @@ def bench_megastep():
             f"{per_backend['jnp']['dispatches_per_frame']} -> "
             f"{per_backend['fused']['dispatches_per_frame']} per frame",
     }
+
+
+def bench_delta():
+    """Delta-temporal zero-skipping (kernels/delta_step.py, the ``delta``
+    backend): a threshold sweep over a slowly-varying random-walk feature
+    stream, reporting the measured delta input density, the MMAC/s the
+    complexity model charges at that density, and an argmax-agreement
+    proxy against the threshold-0 logits.
+
+    Threshold 0 skips only exact quantized repeats and is *bit-identical*
+    to ``jnp`` (asserted here; the full loop-contract sweep lives in
+    tests/test_delta_backend.py).  The MMAC/s figure is analytic from the
+    measured sparsity (paper-style frames/s), so the density -> MMAC
+    reduction in the derived dict is deterministic, not timing noise.
+    """
+    from repro.core.compression.compress import (CompressionConfig,
+                                                 PruneSpec, init_compression)
+    from repro.serving.stream import CompiledRSNN, EngineConfig, StreamLoop
+
+    cfg = RSNNConfig(input_dim=20, hidden_dim=64, fc_dim=192, num_ts=2)
+    params = rsnn.init_params(jax.random.PRNGKey(0), cfg)
+    spec = PruneSpec(kind="nm", n=2, m=4, layout="csc")
+    ccfg = CompressionConfig(weight_bits=4, prune_specs=(("fc_w", spec),))
+
+    # random-walk utterances: frame-to-frame deltas are small relative to
+    # the feature range, the regime the EdgeDRNN gating targets
+    rng = np.random.default_rng(7)
+    utts = []
+    for _ in range(4):
+        steps = 0.02 * rng.normal(size=(24, cfg.input_dim))
+        steps[0] = 0.5 * rng.normal(size=cfg.input_dim)
+        utts.append(np.cumsum(steps, axis=0).astype(np.float32))
+
+    def serve(backend, thr):
+        engine = CompiledRSNN(
+            cfg, params,
+            EngineConfig(backend=backend, precision="int4", sparse_fc=True,
+                         input_scale=0.05, delta_threshold=thr),
+            ccfg=ccfg, cstate=init_compression(params, ccfg))
+        loop = StreamLoop(engine, batch_slots=2, pipeline_depth=0)
+        for u in utts:
+            loop.submit(u)
+        done = sorted(loop.run(), key=lambda r: r.sid)
+        logits = np.concatenate([r.stacked_logits() for r in done])
+        return engine, logits, loop.sparsity_profile(), \
+            loop.mmac_per_second()
+
+    _, base_logits, _, _ = serve("jnp", 0.0)
+    sweep = {}
+    timed_engine = None
+    prev_mmac = None
+    for thr in (0.0, 1.0, 4.0, 16.0):
+        engine, logits, prof, mmac = serve("delta", thr)
+        if thr == 0.0:
+            np.testing.assert_array_equal(logits, base_logits)
+            timed_engine = engine
+        agree = float(np.mean(np.argmax(logits, axis=-1)
+                              == np.argmax(base_logits, axis=-1)))
+        if prev_mmac is not None:
+            assert mmac <= prev_mmac + 1e-9  # coarser gate, never more work
+        prev_mmac = mmac
+        sweep[f"thr_{thr:g}"] = {
+            "delta_input_density": round(float(prof.delta_input_density), 4),
+            "mmac_per_s": round(mmac, 3),
+            "argmax_agreement": round(agree, 4),
+        }
+
+    state = timed_engine.init_state(2)
+    xq = timed_engine.quantize_features(jnp.asarray(utts[0][:2]))
+    timed_engine.step(state, xq)  # compile
+    samples = []
+    for _ in range(30):
+        t0 = time.perf_counter()
+        out = timed_engine.step(state, xq)
+        jax.block_until_ready(out)
+        samples.append((time.perf_counter() - t0) * 1e6)
+    samples.sort()
+
+    return samples[len(samples) // 2], {
+        "thresholds": sweep,
+        "bit_identical_at_thr0": True,
+        "note": "threshold in quantized-input LSBs; MMAC/s analytic from "
+                "measured delta density at the paper frame rate",
+    }

@@ -36,7 +36,8 @@ TIMED = (("bench_rsnn_forward", "bench_rsnn_forward"),
          ("bench_stream_sharded", "bench_stream_sharded"),
          ("bench_stream_pipeline", "bench_stream_pipeline"),
          ("bench_artifact_roundtrip", "bench_artifact_roundtrip"),
-         ("bench_megastep", "bench_megastep"))
+         ("bench_megastep", "bench_megastep"),
+         ("bench_delta", "bench_delta"))
 
 
 def _emit(name: str, us: float, derived) -> None:

@@ -45,6 +45,10 @@ class SparsityProfile:
     l1_density: tuple[float, float] = (0.38, 0.38)
     fc_density: tuple[float, float] = (0.38, 0.38)  # density of L1 output spikes
     fc_union_density: float = 0.46  # OR of the two ts spike trains (merged)
+    # delta-temporal gating (EdgeDRNN, serving 'delta' backend): fraction
+    # of input elements whose change crossed the threshold — 1.0 means no
+    # temporal skipping (the paper's operating point measures none)
+    delta_input_density: float = 1.0
 
 
 @dataclasses.dataclass
@@ -66,6 +70,8 @@ class SparsityCounters:
     spikes_l1: list = dataclasses.field(init=False)
     union_l1: float = 0.0
     input_one_bits: float = 0.0
+    delta_propagated: float = 0.0  # input elements past the delta gate
+    delta_skipped: float = 0.0  # input elements held (temporal skip)
 
     def __post_init__(self):
         self.spikes_l0 = [0.0] * self.num_ts
@@ -80,16 +86,25 @@ class SparsityCounters:
             self.spikes_l1[ts] += float(aux["spikes_l1"][ts])
         self.union_l1 += float(aux["union_l1"])
         self.input_one_bits += float(aux["input_one_bits"])
+        # absent on engines predating the delta backend's packed layout
+        self.delta_propagated += float(aux.get("delta_propagated", 0.0))
+        self.delta_skipped += float(aux.get("delta_skipped", 0.0))
 
     def profile(self) -> SparsityProfile:
         denom = max(self.frames, 1.0) * self.hidden_dim
         l0 = tuple(s / denom for s in self.spikes_l0)
         l1 = tuple(s / denom for s in self.spikes_l1)
         bit_denom = max(self.frames, 1.0) * self.input_dim * self.input_bits
+        delta_total = self.delta_propagated + self.delta_skipped
+        # zero totals = no delta gating measured (non-delta backends emit
+        # zeros): density 1.0 keeps the accounting backend-neutral
+        delta_density = (self.delta_propagated / delta_total
+                         if delta_total > 0 else 1.0)
         return SparsityProfile(
             input_bit_density=self.input_one_bits / bit_denom,
             l0_density=l0, l1_density=l1, fc_density=l1,
-            fc_union_density=self.union_l1 / denom)
+            fc_union_density=self.union_l1 / denom,
+            delta_input_density=delta_density)
 
     def mmac_per_second(self, cfg: RSNNConfig, merged_spike: bool = True,
                         fc_prune_frac: float = 0.0) -> float:
@@ -123,7 +138,10 @@ def accumulates_per_frame(cfg: RSNNConfig, num_ts: int,
     """
     s = sparsity or SparsityProfile(1.0, (1.0,) * 2, (1.0,) * 2, (1.0,) * 2, 1.0)
     h = cfg.hidden_dim
-    inp = cfg.input_bits * cfg.input_dim * h * s.input_bit_density  # once/frame
+    # the input layer's bit-serial pass only visits delta-propagated
+    # elements (EdgeDRNN temporal gating; 1.0 when not measured/enabled)
+    inp = (cfg.input_bits * cfg.input_dim * h
+           * s.input_bit_density * s.delta_input_density)  # once/frame
     rec = 0.0
     for ts in range(num_ts):
         rec += h * h * s.l0_density[ts]  # L0-recurrent, input spikes = h0[ts]

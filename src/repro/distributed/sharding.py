@@ -159,7 +159,10 @@ def stream_state_specs(state, axis: str = "data"):
     The slot/batch dim shards over ``axis``; everything else replicates.
     Convention of ``core.rsnn.RSNNState``: 3-D+ leaves are (TS, B, H) spike
     trains (slot dim 1), 2-D leaves are (B, H) LIF membrane chains and 1-D
-    leaves per-slot scalars (slot dim 0).  ``serving/sharded.py`` places
+    leaves per-slot scalars (slot dim 0).  The delta backend's extra
+    carries (``serving.stream.DeltaRSNNState``: held inputs (B, D), cached
+    pre-activation (B, H)) follow the 2-D rule and shard on the slot dim
+    with no extra case here.  ``serving/sharded.py`` places
     the recurrent state and per-slot cursors with these specs; its pinned
     (slots, T, d) frame buffer and the pipelined contract's on-device logit
     ring carry the slot dim first and are placed with

@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: delta-temporal input gating for the streaming RSNN.
+
+EdgeDRNN's delta-network observation applied to the serving path: consecutive
+10-ms speech frames barely change, so the input-layer stimulus only needs
+recomputation where ``|x_t - x_prev| > threshold``.  The kernel carries the
+*held* input vector (skipped elements keep their last-propagated value) and
+the cached pre-activation, recomputing the ``x_hat @ W`` row only for slots
+with at least one propagated delta — unchanged slots reuse the cached row
+byte for byte, which is what makes the ``threshold=0`` path bit-identical to
+the dense backends (tests/test_delta_backend.py).
+
+Grid: one program per batch tile (mirrors ``kernels/rsnn_cell.py``); W is
+resident in VMEM for the whole tile and the gating mask rides out so the
+wrapper can reduce it into the delta sparsity counters.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _delta_step_kernel(x_ref, xp_ref, pp_ref, w_ref, thr_ref, xh_ref,
+                       pre_ref, mask_ref):
+    x = x_ref[...].astype(jnp.float32)
+    xp = xp_ref[...].astype(jnp.float32)
+    thr = thr_ref[0, 0]
+    # strict inequality: threshold=0 propagates every numeric change and
+    # holds exact repeats, so x_hat == x_t elementwise (bit parity)
+    mask = jnp.abs(x - xp) > thr
+    x_hat = jnp.where(mask, x, xp)
+    # one W fetch per tile; rows of slots with no propagated delta keep the
+    # cached pre-activation bits instead of the freshly computed ones
+    pre = jnp.dot(x_hat, w_ref[...], preferred_element_type=jnp.float32)
+    changed = jnp.any(mask, axis=1, keepdims=True)
+    xh_ref[...] = x_hat.astype(xh_ref.dtype)
+    pre_ref[...] = jnp.where(changed, pre, pp_ref[...].astype(jnp.float32))
+    mask_ref[...] = mask.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def delta_step(x: jax.Array, x_prev: jax.Array, pre_prev: jax.Array,
+               w: jax.Array, threshold: jax.Array, *, block_b: int = 128,
+               interpret: bool = False):
+    """Delta-gated input stimulus.  Shapes: x/x_prev (B, D); pre_prev (B, H);
+    w (D, H); threshold scalar.  Returns (x_hat (B, D), pre (B, H),
+    mask (B, D) float {0,1} of propagated deltas)."""
+    b, d = x.shape
+    h = w.shape[1]
+    bb = min(block_b, b)
+    assert b % bb == 0, f"batch {b} % block {bb}"
+    thr2 = jnp.asarray(threshold, jnp.float32).reshape(1, 1)
+    grid = (b // bb,)
+    return pl.pallas_call(
+        _delta_step_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, d), lambda i: (i, 0)),  # x_t
+            pl.BlockSpec((bb, d), lambda i: (i, 0)),  # x_prev (held)
+            pl.BlockSpec((bb, h), lambda i: (i, 0)),  # cached pre-activation
+            pl.BlockSpec((d, h), lambda i: (0, 0)),  # W: one fetch / tile
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),  # threshold
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, d), lambda i: (i, 0)),
+            pl.BlockSpec((bb, h), lambda i: (i, 0)),
+            pl.BlockSpec((bb, d), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, d), x.dtype),
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, x_prev, pre_prev, w, thr2)

@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import jax
 
+from repro.kernels import delta_step as _delta
 from repro.kernels import int4_matmul as _i4
 from repro.kernels import megastep as _mega
 from repro.kernels import merged_spike_fc as _mfc
@@ -23,6 +24,14 @@ def _interpret() -> bool:
 def rsnn_cell(stim_base, s_prev, w, u0, h0, beta, vth, *, block_b: int = 128):
     return _cell.rsnn_cell(stim_base, s_prev, w, u0, h0, beta, vth,
                            block_b=block_b, interpret=_interpret())
+
+
+def delta_step(x, x_prev, pre_prev, w, threshold, *, block_b: int = 128):
+    """Delta-temporal input gating (``kernels/delta_step.py``): returns
+    (x_hat, pre, mask) with skipped elements held at their last-propagated
+    value and unchanged slots reusing the cached pre-activation row."""
+    return _delta.delta_step(x, x_prev, pre_prev, w, threshold,
+                             block_b=block_b, interpret=_interpret())
 
 
 def int4_matmul(x, packed, scale, *, block_m=128, block_n=128, block_k=512):

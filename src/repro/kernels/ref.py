@@ -31,6 +31,30 @@ def rsnn_cell_ref(stim_base: jax.Array, s_prev: jax.Array, w: jax.Array,
     return jnp.stack(spikes), u
 
 
+def delta_step_ref(x: jax.Array, x_prev: jax.Array, pre_prev: jax.Array,
+                   w: jax.Array, threshold: jax.Array
+                   ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Delta-temporal input gating (EdgeDRNN delta-network formulation).
+
+    Propagate only the input elements whose change exceeds ``threshold``
+    (strict ``|x - x_prev| > threshold``); skipped elements *hold* their
+    last-propagated value, and a slot with no propagated delta reuses its
+    cached pre-activation row bit for bit.  At ``threshold=0`` the held
+    vector equals ``x`` elementwise, so the stimulus is bit-identical to
+    the dense ``x @ w`` path.
+
+    x/x_prev: (B, D); pre_prev: (B, H); w: (D, H); threshold: scalar.
+    Returns (x_hat (B, D), pre (B, H), mask (B, D) float {0,1}).
+    """
+    mask = jnp.abs(x - x_prev) > threshold
+    x_hat = jnp.where(mask, x, x_prev)
+    changed = jnp.any(mask, axis=1, keepdims=True)
+    pre = jnp.where(changed, jnp.dot(x_hat, w,
+                                     preferred_element_type=jnp.float32),
+                    pre_prev)
+    return x_hat, pre, mask.astype(jnp.float32)
+
+
 def unpack_int4_ref(packed: jax.Array) -> jax.Array:
     """(K//2, N) int8 -> (K, N) int8 in [-8, 7] (low nibble = even row)."""
     lo = (packed & 0xF).astype(jnp.int8)

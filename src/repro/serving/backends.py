@@ -34,6 +34,14 @@ Built-in backends:
       layout's ``megastep_fc``), and the sparsity counters in one Pallas
       dispatch with state and packed weights resident in VMEM.
       Bit-identical to ``jnp`` at every loop contract.
+  ``delta``                — EdgeDRNN-style delta-temporal zero skipping:
+      the op table gains a ``delta_gate`` entry (``kernels/delta_step.py``)
+      that holds the previous frame's inputs and input-layer
+      pre-activations in the per-slot step state and recomputes the
+      stimulus only where ``|x_t - x_prev| > ctx.delta_threshold``;
+      measured delta sparsity feeds ``core/complexity.py``.  At
+      ``threshold=0`` bit-identical to ``jnp`` at every loop contract
+      (tests/test_delta_backend.py).
 
 New kernels plug in via ``register`` without touching the engine: the
 engine resolves a table once at construction and calls through it.
@@ -45,6 +53,7 @@ import dataclasses
 from typing import Callable, NamedTuple
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import layouts, spike_ops
 from repro.core.lif import LIFState
@@ -70,6 +79,7 @@ class BackendContext:
     dense: dict  # name -> (K, N) float32
     quant: dict  # name -> layouts.dense.QuantTensor
     sparse: dict  # name -> layout tensor (SparseColumns / NMGroupPacked)
+    delta_threshold: float = 0.0  # delta backend's |x_t - x_prev| gate
 
 
 class OpTable(NamedTuple):
@@ -79,6 +89,13 @@ class OpTable(NamedTuple):
     frame step becomes that one call — ``(state, x_t, lif) -> (new_state,
     logits, aux)`` with ``aux`` matching ``stream._frame_counters`` — and
     the per-op entries are never invoked.
+
+    ``delta_gate``, when set, makes the engine carry delta step state
+    (``stream.DeltaRSNNState``: held inputs + cached input-layer
+    pre-activation per slot) and call ``(x_t, x_prev, pre_prev) ->
+    (x_hat, pre, mask)`` before the per-op composition: ``pre`` replaces
+    the L0 feedforward stimulus and ``mask``'s reduction feeds the delta
+    sparsity counters.
     """
 
     name: str
@@ -87,6 +104,7 @@ class OpTable(NamedTuple):
     fc: Callable  # (spikes_ts (TS, B, H)) -> (B, fc_dim)
     mxu_aligned: bool  # True: batch must satisfy the 128-row MXU tiling
     megastep: Callable | None = None  # whole-frame single-dispatch step
+    delta_gate: Callable | None = None  # delta-temporal input gating
 
 
 class _Entry(NamedTuple):
@@ -187,6 +205,29 @@ def _build_ref(ctx: BackendContext) -> OpTable:
                    ff_matmul=_dense_ff(ctx), fc=fc, mxu_aligned=False)
 
 
+@register("delta", dense_stimulus=True)
+def _build_delta(ctx: BackendContext) -> OpTable:
+    """EdgeDRNN-style delta-temporal zero skipping over the ref table.
+
+    The table is the ``ref`` oracles plus a ``delta_gate`` closure over the
+    dense (dequantized-at-int4, bit-exact) L0 feedforward weights: the
+    engine carries each slot's held input vector and cached input-layer
+    pre-activation (``stream.DeltaRSNNState``) and only recomputes the
+    stimulus row for slots with a propagated delta.  ``threshold=0``
+    propagates every numeric change, so logits/state/counters are
+    bit-identical to ``jnp``; ``threshold>0`` trades stimulus drift for
+    measured temporal sparsity (the ``delta_*`` counters -> MMAC/s).
+    """
+    table = _build_ref(ctx)
+    w0x = ctx.dense["l0_wx"]
+    thr = jnp.float32(ctx.delta_threshold)
+
+    def delta_gate(x_t: jax.Array, x_prev: jax.Array, pre_prev: jax.Array):
+        return ops.delta_step(x_t, x_prev, pre_prev, w0x, thr)
+
+    return table._replace(name="delta", delta_gate=delta_gate)
+
+
 @register("pallas")
 def _build_pallas(ctx: BackendContext) -> OpTable:
     if ctx.precision == "int4":
@@ -257,8 +298,10 @@ def _build_fused(ctx: BackendContext) -> OpTable:
         new_state = RSNNState(h0=s0, h1=s1,
                               lif0=LIFState(u=u0, spike=s0[-1]),
                               lif1=LIFState(u=u1, spike=s1[-1]))
+        zero = jnp.zeros_like(bits[0])  # no delta gating in the mega-step
         aux = {"spikes_l0": sp0[0], "spikes_l1": sp1[0],
-               "union_l1": union[0], "input_one_bits": bits[0]}
+               "union_l1": union[0], "input_one_bits": bits[0],
+               "delta_propagated": zero, "delta_skipped": zero}
         return new_state, logits[0], aux
 
     def _collapsed(op: str) -> Callable:

@@ -118,7 +118,7 @@ class ShardedStreamLoop(StreamLoop):
 
     def _zero_aux_acc(self):
         return jax.device_put(
-            jnp.zeros((2 * self.engine.cfg.num_ts + 2,), jnp.float32),
+            jnp.zeros((2 * self.engine.cfg.num_ts + 4,), jnp.float32),
             self._rep)
 
     # ------------------------------------------------------------- frontend

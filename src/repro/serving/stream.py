@@ -80,6 +80,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -104,6 +105,7 @@ class EngineConfig:
     precision: str = "float"  # "float" | "int4" (packed model from sparse.py)
     sparse_fc: bool = False  # zero-skip CSC path for the pruned FC
     input_scale: float | jax.Array | None = None  # static 8-bit calibration
+    delta_threshold: float = 0.0  # delta backend: |x_t - x_prev| gate (LSBs)
 
     def __post_init__(self):
         if self.backend not in backends.available():
@@ -114,6 +116,13 @@ class EngineConfig:
         if self.wants_sparse_fc and self.precision != "int4":
             raise ValueError("the zero-skip CSC FC runs over the packed "
                              "int4 model (set precision='int4')")
+        if self.delta_threshold < 0.0:
+            raise ValueError(
+                f"delta_threshold must be >= 0, got {self.delta_threshold}")
+        if self.delta_threshold != 0.0 and self.backend != "delta":
+            raise ValueError(
+                "delta_threshold is the 'delta' backend's knob; backend "
+                f"{self.backend!r} would silently ignore it")
 
     @property
     def wants_sparse_fc(self) -> bool:
@@ -126,8 +135,29 @@ def calibrate_input_scale(features: jax.Array, bits: int = 8) -> jax.Array:
     return spike_ops.quantize_input(features, bits)[1]
 
 
-def reset_slot(state: RSNNState, i: int) -> RSNNState:
+class DeltaRSNNState(NamedTuple):
+    """Per-slot step state of the ``delta`` backend: the core recurrent
+    state plus EdgeDRNN-style delta carries — ``x_prev`` the *held* input
+    vector (skipped elements keep their last-propagated value) and ``pre``
+    the cached input-layer pre-activation row reused when a slot has no
+    propagated delta.  A NamedTuple, so it is a pytree: ``lax.scan``
+    carries it, ``distributed.sharding.stream_state_specs`` shards its
+    2-D (slots, ...) leaves on the slot dim like the LIF membrane chains.
+    """
+
+    rsnn: RSNNState
+    x_prev: jax.Array  # (B, input_dim) held input
+    pre: jax.Array  # (B, hidden_dim) cached x_hat @ l0_wx
+
+
+def reset_slot(state, i: int):
     """Zero one slot's recurrent state (fresh utterance boundary)."""
+    if isinstance(state, DeltaRSNNState):
+        # delta carries reset with the core state: a fresh utterance must
+        # not inherit the previous occupant's held inputs/pre-activations
+        return DeltaRSNNState(rsnn=reset_slot(state.rsnn, i),
+                              x_prev=state.x_prev.at[i].set(0.0),
+                              pre=state.pre.at[i].set(0.0))
 
     def zl(s: LIFState) -> LIFState:
         return LIFState(u=s.u.at[i].set(0.0), spike=s.spike.at[i].set(0.0))
@@ -205,7 +235,7 @@ class CompiledRSNN:
         self._ctx = backends.BackendContext(
             cfg=cfg, precision=engine.precision,
             sparse_fc=engine.wants_sparse_fc, dense=dense, quant=quant,
-            sparse=csc)
+            sparse=csc, delta_threshold=engine.delta_threshold)
         self.ops = backends.resolve(engine.backend, self._ctx)
         self._w = self._ctx.dense
 
@@ -274,7 +304,7 @@ class CompiledRSNN:
 
     # ------------------------------------------------------------ frontend
 
-    def init_state(self, batch: int) -> RSNNState:
+    def init_state(self, batch: int):
         if self.ops.mxu_aligned:
             # MXU tiling contract of the fused kernels: a batch over 128
             # must be a multiple of the 128-row block (rsnn_cell's b-grid;
@@ -288,7 +318,15 @@ class CompiledRSNN:
                         f"pallas backend needs {what} <= 128 or a multiple "
                         f"of 128, got {m}; use backend='jnp' or pad the "
                         f"slot count")
-        return rsnn.init_state(self.cfg, batch)
+        state = rsnn.init_state(self.cfg, batch)
+        if self.ops.delta_gate is not None:
+            # zero delta carries: frame 1 of every stream propagates all
+            # its nonzero elements against the zero held vector
+            return DeltaRSNNState(
+                rsnn=state,
+                x_prev=jnp.zeros((batch, self.cfg.input_dim), jnp.float32),
+                pre=jnp.zeros((batch, self.cfg.hidden_dim), jnp.float32))
+        return state
 
     def quantize_features(self, x: jax.Array) -> jax.Array:
         """8-bit fixed-point input quantization with the static scale.
@@ -308,7 +346,7 @@ class CompiledRSNN:
 
     # ------------------------------------------------------- layer dispatch
 
-    def _frame_step(self, state: RSNNState, x_t: jax.Array):
+    def _frame_step(self, state, x_t: jax.Array):
         """One quantized frame x_t (B, input_dim) -> (state, logits, aux).
 
         Every kernel choice goes through ``self.ops`` (the op table the
@@ -322,6 +360,29 @@ class CompiledRSNN:
             # loop contract (v1, v2 ring, scan, sharded) funnels here, so
             # they all inherit the collapsed dispatch
             return self.ops.megastep(state, x_t, self._lif)
+        if self.ops.delta_gate is not None:
+            # delta-temporal gating (EdgeDRNN): propagate only elements
+            # with |x_t - x_prev| > threshold, hold the rest, and reuse
+            # the cached L0 pre-activation for slots with no delta; the
+            # held x_hat also feeds the bit counters, so at threshold>0
+            # they measure the stimulus the step actually used
+            x_hat, pre, mask = self.ops.delta_gate(x_t, state.x_prev,
+                                                   state.pre)
+            core, logits, aux = self._compose_step(state.rsnn, x_hat,
+                                                   ff0=pre)
+            prop = mask.sum(axis=1)
+            aux = dict(aux, delta_propagated=prop,
+                       delta_skipped=x_t.shape[1] - prop)
+            return (DeltaRSNNState(rsnn=core, x_prev=x_hat, pre=pre),
+                    logits, aux)
+        return self._compose_step(state, x_t)
+
+    def _compose_step(self, state: RSNNState, x_t: jax.Array,
+                      ff0: jax.Array | None = None):
+        """Per-op frame step (the non-collapsed backends): both cells, the
+        readout, and the host-side counters composed from the op table.
+        ``ff0`` overrides the L0 feedforward stimulus (the delta route's
+        cached/gated pre-activation)."""
         cell, ff, fc = self.ops.rsnn_cell, self.ops.ff_matmul, self.ops.fc
         w = self._w
         lif = self._lif
@@ -330,7 +391,8 @@ class CompiledRSNN:
         h = self.cfg.hidden_dim
 
         # L0: feedforward stimulus once per frame, shared across time steps
-        ff0 = ff(x_t, "l0_wx")  # (B, H)
+        if ff0 is None:
+            ff0 = ff(x_t, "l0_wx")  # (B, H)
         stim0 = jnp.broadcast_to(ff0[None], (ts, b, h))
         s0, u0 = cell(stim0, state.h0, w["l0_wh"], state.lif0.u,
                       state.lif0.spike, lif["beta0"], lif["vth0"])
@@ -453,20 +515,27 @@ def _frame_counters(x_t: jax.Array, s0: jax.Array, s1: jax.Array,
                     input_bits: int) -> dict:
     """Per-slot zero-skip counters for one frame (see module docstring)."""
     one_bits = spike_ops.bitplanes(x_t, input_bits).sum(axis=(1, 2))  # (B,)
+    zero = jnp.zeros_like(one_bits, dtype=jnp.float32)
     return {
         "spikes_l0": s0.sum(axis=2),  # (TS, B)
         "spikes_l1": s1.sum(axis=2),  # (TS, B)
         "union_l1": s1.max(axis=0).sum(axis=1),  # (B,)
         "input_one_bits": one_bits.astype(jnp.float32),  # (B,)
+        # delta-temporal gating counters: zero unless the delta route
+        # overrides them (zero totals read back as density 1.0 — "not
+        # measured" — in complexity.SparsityCounters.profile)
+        "delta_propagated": zero,  # (B,)
+        "delta_skipped": zero,  # (B,)
     }
 
 
 def pack_step_aux(aux: dict, active: jax.Array) -> jax.Array:
     """Mask the per-slot counters of one step by ``active`` and reduce over
     slots, packed into one flat device vector: ``[spikes_l0 (TS,),
-    spikes_l1 (TS,), union_l1, input_one_bits]``.  The slot loops fetch this
-    single vector per step (v1) or accumulate it on device and fetch once
-    per drain (v2) instead of one host round-trip per counter key.
+    spikes_l1 (TS,), union_l1, input_one_bits, delta_propagated,
+    delta_skipped]``.  The slot loops fetch this single vector per step
+    (v1) or accumulate it on device and fetch once per drain (v2) instead
+    of one host round-trip per counter key.
     """
     act = active.astype(jnp.float32)
     return jnp.concatenate([
@@ -474,6 +543,8 @@ def pack_step_aux(aux: dict, active: jax.Array) -> jax.Array:
         (aux["spikes_l1"] * act).sum(axis=-1),
         (aux["union_l1"] * act).sum(axis=-1)[None],
         (aux["input_one_bits"] * act).sum(axis=-1)[None],
+        (aux["delta_propagated"] * act).sum(axis=-1)[None],
+        (aux["delta_skipped"] * act).sum(axis=-1)[None],
     ])
 
 
@@ -484,7 +555,9 @@ def unpack_step_aux(vec, num_ts: int) -> dict:
     same way as a single step's vector."""
     v = np.asarray(vec)
     return {"spikes_l0": v[:num_ts], "spikes_l1": v[num_ts:2 * num_ts],
-            "union_l1": v[2 * num_ts], "input_one_bits": v[2 * num_ts + 1]}
+            "union_l1": v[2 * num_ts], "input_one_bits": v[2 * num_ts + 1],
+            "delta_propagated": v[2 * num_ts + 2],
+            "delta_skipped": v[2 * num_ts + 3]}
 
 
 # ---------------------------------------------------------------------------
@@ -611,7 +684,7 @@ class StreamLoop(SlotScheduler):
 
     def _zero_aux_acc(self):
         """Zeroed packed-counter accumulator (overridden to place on mesh)."""
-        return jnp.zeros((2 * self.engine.cfg.num_ts + 2,), jnp.float32)
+        return jnp.zeros((2 * self.engine.cfg.num_ts + 4,), jnp.float32)
 
     # ------------------------------------------------------------- frontend
 

@@ -1,0 +1,71 @@
+"""Backend-registry conformance: every registered backend serves bitwise.
+
+One parametrized fixture instantiates every entry in
+``serving.backends.available()`` — aliases included — over the same
+int4 + pruned-CSC model and serves the same 3 frames.  Each backend must
+match the ``jnp`` oracle bit for bit on logits and the shared counters at
+threshold-equivalent settings (the delta backend's default threshold is 0).
+A future backend registered without honouring the parity contract fails
+here without anyone writing a test for it.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import rsnn
+from repro.core.compression.compress import (CompressionConfig, PruneSpec,
+                                             init_compression)
+from repro.core.rsnn import RSNNConfig
+from repro.serving import backends, stream as S
+
+SHARED_KEYS = ("spikes_l0", "spikes_l1", "union_l1", "input_one_bits")
+
+CFG = RSNNConfig(input_dim=8, hidden_dim=16, fc_dim=12, num_ts=2)
+
+
+def _build(params, backend):
+    spec = PruneSpec(kind="nm", n=2, m=4, layout="csc")
+    ccfg = CompressionConfig(weight_bits=4, prune_specs=(("fc_w", spec),))
+    ec = S.EngineConfig(backend=backend, precision="int4", sparse_fc=True,
+                        input_scale=0.05)
+    return S.CompiledRSNN(CFG, params, ec, ccfg,
+                          init_compression(params, ccfg))
+
+
+@pytest.fixture(scope="module")
+def served():
+    """Serve 3 frames through every registered backend once."""
+    params = rsnn.init_params(__import__("jax").random.PRNGKey(42), CFG)
+    rng = np.random.default_rng(9)
+    frames = [jnp.asarray(rng.normal(size=(2, CFG.input_dim))
+                          .astype(np.float32)) for _ in range(3)]
+    out = {}
+    for name in backends.available():
+        eng = _build(params, name)
+        st = eng.init_state(2)
+        logits, aux = [], []
+        for x in frames:
+            st, lg, a = eng.step(st, eng.quantize_features(x))
+            logits.append(np.asarray(lg))
+            aux.append({k: np.asarray(a[k]) for k in SHARED_KEYS})
+        out[name] = (np.stack(logits), aux)
+    return out
+
+
+def test_registry_is_complete():
+    """The built-in recipe set is discoverable (new names extend, never
+    shrink, this list)."""
+    assert {"ref", "jnp", "pallas", "sparse", "fused",
+            "delta"} <= set(backends.available())
+
+
+@pytest.mark.parametrize("name", backends.available())
+def test_backend_serves_bit_identically_to_jnp(name, served):
+    logits, aux = served[name]
+    ref_logits, ref_aux = served["jnp"]
+    np.testing.assert_array_equal(logits, ref_logits, err_msg=name)
+    for a, b in zip(aux, ref_aux):
+        for k in SHARED_KEYS:
+            np.testing.assert_array_equal(a[k], b[k],
+                                          err_msg=f"{name}:{k}")

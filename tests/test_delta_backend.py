@@ -1,0 +1,453 @@
+"""Delta-temporal zero-skipping backend parity suite.
+
+The ``delta`` backend's contract is EdgeDRNN-style temporal gating with a
+hard bit-identity floor: at ``threshold=0`` every numeric change propagates
+and every exact repeat holds, so logits, carried core state, AND the
+spike/bit counters match the ``jnp`` backend bit for bit across every loop
+contract (v1 sync, pipelined ring, scan, sharded mesh, from-artifact) and
+every precision/layout mode — the same sweep shape as test_megastep.py.
+On top of that: gating-math properties (monotone in threshold, counter
+conservation, idempotence on constant input, chunked == one-shot) with a
+``hypothesis`` fuzzed tier when installed and a deterministic tier always.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import artifact, rsnn
+from repro.core.compression.compress import (CompressionConfig, PruneSpec,
+                                             init_compression)
+from repro.core.rsnn import RSNNConfig
+from repro.kernels import ops, ref
+from repro.serving import backends, stream as S
+from repro.serving.sharded import ShardedStreamLoop
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on bare installs
+    HAVE_HYPOTHESIS = False
+
+MODES = ("float", "dense", "csc", "nm")  # precision/layout combos
+
+# counters shared by every backend; the delta_* keys are delta-only
+# extras (the jnp backend reports them as zero = "not measured")
+LEGACY_KEYS = ("spikes_l0", "spikes_l1", "union_l1", "input_one_bits")
+
+
+def _engine(cfg, params, backend, mode, threshold=0.0):
+    """One serving engine per sweep cell (same cells as test_megastep)."""
+    thr = {"delta_threshold": threshold} if backend == "delta" else {}
+    if mode == "float":
+        return S.CompiledRSNN(cfg, params,
+                              S.EngineConfig(backend=backend,
+                                             input_scale=0.05, **thr))
+    if mode == "dense":
+        ccfg = CompressionConfig(weight_bits=4)
+        ec = S.EngineConfig(backend=backend, precision="int4",
+                            input_scale=0.05, **thr)
+    else:
+        tag = {"csc": "csc", "nm": "nm_group"}[mode]
+        spec = PruneSpec(kind="nm", n=2, m=4, layout=tag)
+        ccfg = CompressionConfig(weight_bits=4, prune_specs=(("fc_w", spec),))
+        ec = S.EngineConfig(backend=backend, precision="int4", sparse_fc=True,
+                            input_scale=0.05, **thr)
+    return S.CompiledRSNN(cfg, params, ec, ccfg, init_compression(params,
+                                                                  ccfg))
+
+
+def _frames(cfg, n, batch, seed=3):
+    rng = np.random.default_rng(seed)
+    return [jnp.asarray(rng.normal(size=(batch, cfg.input_dim))
+                        .astype(np.float32)) for _ in range(n)]
+
+
+def _utterances(cfg, lens, seed=7):
+    rng = np.random.default_rng(seed)
+    return [rng.normal(size=(t, cfg.input_dim)).astype(np.float32)
+            for t in lens]
+
+
+def _assert_tree_equal(a, b):
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def _core(state):
+    """The comparable recurrent core of either state flavour."""
+    return state.rsnn if isinstance(state, S.DeltaRSNNState) else state
+
+
+# --------------------------------------------------- step-level bit identity
+
+
+@pytest.mark.parametrize("num_ts", [1, 2])
+@pytest.mark.parametrize("mode", MODES)
+def test_delta_step_bit_identical_to_jnp(num_ts, mode, rng_key):
+    """threshold=0: logits, carried core state, and the shared counters
+    match the jnp backend bitwise frame after frame, and the delta
+    counters conserve propagated + skipped == input_dim per slot."""
+    cfg = RSNNConfig(input_dim=8, hidden_dim=16, fc_dim=12, num_ts=num_ts)
+    params = rsnn.init_params(rng_key, cfg)
+    ej = _engine(cfg, params, "jnp", mode)
+    ed = _engine(cfg, params, "delta", mode)
+    stj, std = ej.init_state(3), ed.init_state(3)
+    for x in _frames(cfg, 5, 3):
+        xq = ej.quantize_features(x)
+        stj, lj, aj = ej.step(stj, xq)
+        std, ld, ad = ed.step(std, xq)
+        np.testing.assert_array_equal(np.asarray(lj), np.asarray(ld))
+        _assert_tree_equal(stj, _core(std))
+        for k in LEGACY_KEYS:
+            np.testing.assert_array_equal(np.asarray(aj[k]),
+                                          np.asarray(ad[k]))
+        np.testing.assert_array_equal(
+            np.asarray(ad["delta_propagated"] + ad["delta_skipped"]),
+            np.full(3, cfg.input_dim, np.float32))
+
+
+def test_delta_state_carries_held_inputs(small_cfg, rng_key):
+    """The step state is the delta flavour: held inputs track x_hat and the
+    cached pre-activation row is bitwise-reused on a no-delta frame."""
+    params = rsnn.init_params(rng_key, small_cfg)
+    ed = _engine(small_cfg, params, "delta", "float", threshold=1.0)
+    st = ed.init_state(2)
+    assert isinstance(st, S.DeltaRSNNState)
+    x = _frames(small_cfg, 1, 2)[0]
+    xq = ed.quantize_features(x)
+    st1, _, _ = ed.step(st, xq)
+    st2, _, a2 = ed.step(st1, xq)  # identical frame: nothing propagates
+    np.testing.assert_array_equal(np.asarray(a2["delta_propagated"]),
+                                  np.zeros(2, np.float32))
+    np.testing.assert_array_equal(np.asarray(st1.x_prev),
+                                  np.asarray(st2.x_prev))
+    np.testing.assert_array_equal(np.asarray(st1.pre), np.asarray(st2.pre))
+
+
+# ------------------------------------------------------ kernel-level parity
+
+
+def test_kernel_matches_jnp_oracle(small_cfg, rng_key):
+    """ops.delta_step (the interpret-mode Pallas kernel) == ref.delta_step_ref
+    bitwise, across thresholds including the exact-repeat edge."""
+    rng = np.random.default_rng(0)
+    d, h = small_cfg.input_dim, small_cfg.hidden_dim
+    w = jnp.asarray(rng.normal(size=(d, h)).astype(np.float32))
+    x_prev = jnp.asarray(np.round(8 * rng.normal(size=(4, d)))
+                         .astype(np.float32))
+    x = x_prev.at[0].set(x_prev[0])  # row 0: exact repeat (no delta)
+    x = x.at[1:].add(jnp.asarray(np.round(3 * rng.normal(size=(3, d)))
+                                 .astype(np.float32)))
+    pre_prev = jnp.asarray(rng.normal(size=(4, h)).astype(np.float32))
+    for thr in (0.0, 1.0, 4.0):
+        out_k = ops.delta_step(x, x_prev, pre_prev, w, thr)
+        out_r = ref.delta_step_ref(x, x_prev, pre_prev, w, thr)
+        for a, b in zip(out_k, out_r):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # unchanged row reuses the cached pre-activation bits, not a recompute
+    _, pre, mask = ops.delta_step(x, x_prev, pre_prev, w, 0.0)
+    assert float(np.asarray(mask)[0].sum()) == 0.0
+    np.testing.assert_array_equal(np.asarray(pre)[0],
+                                  np.asarray(pre_prev)[0])
+
+
+# ------------------------------------------------------- loop-contract parity
+
+
+@pytest.mark.parametrize("depth", [0, 2])
+@pytest.mark.parametrize("mode", MODES)
+def test_streamloop_delta_matches_jnp(small_cfg, rng_key, depth, mode):
+    """StreamLoop at both step contracts (v1 sync, v2 pipelined ring):
+    delta at threshold=0 serves every stream bit-identically to jnp,
+    shared counters included, with refill/reset mid-batch."""
+    params = rsnn.init_params(rng_key, small_cfg)
+    utts = _utterances(small_cfg, [5, 9, 3, 7, 6])
+    done, counters = {}, {}
+    for backend in ("jnp", "delta"):
+        eng = _engine(small_cfg, params, backend, mode)
+        loop = S.StreamLoop(eng, batch_slots=2, pipeline_depth=depth,
+                            ring_frames=16)
+        for u in utts:
+            loop.submit(u)
+        done[backend] = loop.run()
+        counters[backend] = loop.counters
+    assert [r.sid for r in done["delta"]] == [r.sid for r in done["jnp"]]
+    for a, b in zip(done["jnp"], done["delta"]):
+        np.testing.assert_array_equal(a.stacked_logits(), b.stacked_logits())
+    cj, cd = counters["jnp"], counters["delta"]
+    assert cd.frames == cj.frames
+    np.testing.assert_array_equal(np.asarray(cd.spikes_l0),
+                                  np.asarray(cj.spikes_l0))
+    np.testing.assert_array_equal(np.asarray(cd.spikes_l1),
+                                  np.asarray(cj.spikes_l1))
+    np.testing.assert_array_equal(np.asarray(cd.union_l1),
+                                  np.asarray(cj.union_l1))
+    np.testing.assert_array_equal(np.asarray(cd.input_one_bits),
+                                  np.asarray(cj.input_one_bits))
+    # delta counters conserve over the whole serve
+    assert (cd.delta_propagated + cd.delta_skipped
+            == cd.frames * small_cfg.input_dim)
+
+
+@pytest.mark.parametrize("depth", [0, 2])
+def test_sharded_loop_delta_matches_jnp(small_cfg, rng_key, depth):
+    """ShardedStreamLoop (mesh data path, delta state placed via
+    stream_state_specs): delta == jnp bitwise at both depths."""
+    params = rsnn.init_params(rng_key, small_cfg)
+    utts = _utterances(small_cfg, [5, 9, 3, 7])
+    done = {}
+    for backend in ("jnp", "delta"):
+        eng = _engine(small_cfg, params, backend, "csc")
+        loop = ShardedStreamLoop(eng, batch_slots=2, max_frames=16,
+                                 pipeline_depth=depth, ring_frames=16)
+        for u in utts:
+            loop.submit(u)
+        done[backend] = loop.run()
+    assert [r.sid for r in done["delta"]] == [r.sid for r in done["jnp"]]
+    for a, b in zip(done["jnp"], done["delta"]):
+        np.testing.assert_array_equal(a.stacked_logits(), b.stacked_logits())
+
+
+def test_run_scan_contract_delta_matches_jnp(small_cfg, rng_key):
+    """The batch ``run`` path (lax.scan over frames) carries the delta
+    state pytree: logits and per-frame shared aux match jnp bitwise."""
+    params = rsnn.init_params(rng_key, small_cfg)
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(2, 6, small_cfg.input_dim))
+                    .astype(np.float32))
+    ej = _engine(small_cfg, params, "jnp", "dense")
+    ed = _engine(small_cfg, params, "delta", "dense")
+    lj, _, aj = ej.run(x)
+    ld, std, ad = ed.run(x)
+    np.testing.assert_array_equal(np.asarray(lj), np.asarray(ld))
+    assert isinstance(std, S.DeltaRSNNState)
+    for k in LEGACY_KEYS:
+        np.testing.assert_array_equal(np.asarray(aj[k]), np.asarray(ad[k]))
+
+
+def test_from_artifact_delta_matches_jnp(small_cfg, rng_key, tmp_path):
+    """The on-disk deployment artifact served with backend='delta' matches
+    the same artifact served with 'jnp', bit for bit."""
+    params = rsnn.init_params(rng_key, small_cfg)
+    spec = PruneSpec(kind="nm", n=2, m=4, layout="csc")
+    ccfg = CompressionConfig(weight_bits=4, prune_specs=(("fc_w", spec),))
+    packed = __import__("repro.core.sparse", fromlist=["pack_model"]) \
+        .pack_model(params, small_cfg, ccfg, init_compression(params, ccfg))
+    path = artifact.save_artifact(tmp_path / "art", cfg=small_cfg,
+                                  packed=packed, ccfg=ccfg,
+                                  input_scale=0.05, sparse_fc=True)
+    ej = S.CompiledRSNN.from_artifact(path, backend="jnp")
+    ed = S.CompiledRSNN.from_artifact(path, backend="delta")
+    stj, std = ej.init_state(2), ed.init_state(2)
+    assert isinstance(std, S.DeltaRSNNState)
+    for x in _frames(small_cfg, 4, 2):
+        xq = ej.quantize_features(x)
+        stj, lj, _ = ej.step(stj, xq)
+        std, ld, _ = ed.step(std, xq)
+        np.testing.assert_array_equal(np.asarray(lj), np.asarray(ld))
+    _assert_tree_equal(stj, _core(std))
+
+
+# -------------------------------------------------- refill / reset coverage
+
+
+def test_refill_resets_delta_carries(small_cfg, rng_key):
+    """A slot refilled mid-batch must not leak the previous occupant's held
+    inputs/pre-activations: at threshold>0 the second stream's logits
+    equal serving it alone in a fresh loop."""
+    params = rsnn.init_params(rng_key, small_cfg)
+    u1, u2 = _utterances(small_cfg, [6, 8])
+    eng = _engine(small_cfg, params, "delta", "float", threshold=2.0)
+    loop = S.StreamLoop(eng, batch_slots=1, pipeline_depth=0)
+    loop.submit(u1)
+    loop.submit(u2)
+    shared = {r.sid: r.stacked_logits() for r in loop.run()}
+
+    fresh = S.StreamLoop(_engine(small_cfg, params, "delta", "float",
+                                 threshold=2.0), batch_slots=1,
+                         pipeline_depth=0)
+    alone_sid = fresh.submit(u2)
+    alone = {r.sid: r.stacked_logits() for r in fresh.run()}
+    np.testing.assert_array_equal(shared[1], alone[alone_sid])
+
+
+def test_reset_slot_zeroes_delta_state(small_cfg, rng_key):
+    params = rsnn.init_params(rng_key, small_cfg)
+    eng = _engine(small_cfg, params, "delta", "float")
+    st = eng.init_state(3)
+    st, _, _ = eng.step(st, eng.quantize_features(_frames(small_cfg, 1,
+                                                          3)[0]))
+    assert float(np.abs(np.asarray(st.x_prev)).sum()) > 0
+    st = S.reset_slot(st, 1)
+    np.testing.assert_array_equal(np.asarray(st.x_prev)[1], 0.0)
+    np.testing.assert_array_equal(np.asarray(st.pre)[1], 0.0)
+    np.testing.assert_array_equal(np.asarray(st.rsnn.lif0.u)[1], 0.0)
+    assert float(np.abs(np.asarray(st.x_prev)[[0, 2]]).sum()) > 0
+
+
+# ------------------------------------------- threshold semantics / counters
+
+
+def test_larger_threshold_propagates_fewer_deltas(small_cfg, rng_key):
+    """Monotonicity: raising the threshold never propagates more elements,
+    and the measured MMAC/s (delta density folded into the input term)
+    never rises."""
+    params = rsnn.init_params(rng_key, small_cfg)
+    utts = _utterances(small_cfg, [12, 9, 15])
+    prop, mmac = [], []
+    for thr in (0.0, 1.0, 4.0, 16.0):
+        eng = _engine(small_cfg, params, "delta", "float", threshold=thr)
+        loop = S.StreamLoop(eng, batch_slots=2, pipeline_depth=2,
+                            ring_frames=16)
+        for u in utts:
+            loop.submit(u)
+        loop.run()
+        c = loop.counters
+        assert (c.delta_propagated + c.delta_skipped
+                == c.frames * small_cfg.input_dim)
+        prop.append(c.delta_propagated)
+        mmac.append(loop.mmac_per_second())
+    assert prop == sorted(prop, reverse=True)
+    assert mmac == sorted(mmac, reverse=True)
+    assert prop[-1] < prop[0]  # a 16-LSB gate really skips something
+    profile = loop.sparsity_profile()
+    assert profile.delta_input_density < 1.0
+
+
+def test_nonzero_threshold_requires_delta_backend():
+    with pytest.raises(ValueError, match="delta"):
+        S.EngineConfig(backend="jnp", delta_threshold=1.0)
+    with pytest.raises(ValueError, match=">= 0"):
+        S.EngineConfig(backend="delta", delta_threshold=-0.5)
+
+
+# ------------------------------------------------------- property bodies
+# (deterministic tier always runs; hypothesis fuzzes them when installed)
+
+
+def _gate_seq(frames, thr, d, h, seed):
+    """Iterate ref.delta_step_ref over a frame sequence from zero carries;
+    returns the per-frame propagated counts and the final carries."""
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(d, h)).astype(np.float32))
+    x_prev = jnp.zeros((frames[0].shape[0], d), jnp.float32)
+    pre = jnp.zeros((frames[0].shape[0], h), jnp.float32)
+    props = []
+    for x in frames:
+        x_prev, pre, mask = ref.delta_step_ref(jnp.asarray(x), x_prev, pre,
+                                               jnp.asarray(w), thr)
+        props.append(np.asarray(mask).sum())
+    return props, (np.asarray(x_prev), np.asarray(pre))
+
+
+def _check_idempotent_on_constant(thr, seed):
+    """Constant input: everything nonzero propagates on frame 1, nothing
+    after (zero updates — the delta network goes fully idle)."""
+    rng = np.random.default_rng(seed)
+    x = np.round(8 * rng.normal(size=(3, 6))).astype(np.float32)
+    props, (x_prev, _) = _gate_seq([x] * 5, thr, 6, 4, seed)
+    expected_first = float((np.abs(x) > thr).sum())
+    assert props[0] == expected_first
+    assert all(p == 0.0 for p in props[1:])
+    # held vector converged to the propagated elements of x
+    np.testing.assert_array_equal(x_prev, np.where(np.abs(x) > thr, x, 0.0))
+
+
+def _check_chunked_equals_oneshot(thr, seed, split):
+    """Chunked serving with carried delta state == one-shot, exactly."""
+    cfg = RSNNConfig(input_dim=8, hidden_dim=16, fc_dim=12, num_ts=2)
+    params = rsnn.init_params(jax.random.PRNGKey(seed), cfg)
+    eng = S.CompiledRSNN(cfg, params,
+                         S.EngineConfig(backend="delta", input_scale=0.05,
+                                        delta_threshold=thr))
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(2, 7, cfg.input_dim))
+                    .astype(np.float32))
+    l_one, st_one, _ = eng.run(x)
+    la, st, _ = eng.run(x[:, :split])
+    lb, st_chunk, _ = eng.run(x[:, split:], state=st)
+    np.testing.assert_array_equal(
+        np.asarray(l_one), np.concatenate([np.asarray(la), np.asarray(lb)],
+                                          axis=1))
+    _assert_tree_equal(st_one, st_chunk)
+
+
+def _check_conservation(thr, seed):
+    """propagated + skipped == total input elements, every frame."""
+    rng = np.random.default_rng(seed)
+    frames = [np.round(8 * rng.normal(size=(4, 10))).astype(np.float32)
+              for _ in range(4)]
+    d = 10
+    props, _ = _gate_seq(frames, thr, d, 5, seed)
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(d, 5)).astype(np.float32))
+    x_prev = jnp.zeros((4, d), jnp.float32)
+    pre = jnp.zeros((4, 5), jnp.float32)
+    for x in frames:
+        x_prev, pre, mask = ref.delta_step_ref(jnp.asarray(x), x_prev, pre,
+                                               w, thr)
+        m = np.asarray(mask)
+        np.testing.assert_array_equal(m.sum(axis=1) + (1 - m).sum(axis=1),
+                                      np.full(4, d, np.float32))
+
+
+# ------------------------------------------------- deterministic tier
+
+
+@pytest.mark.parametrize("thr", [0.0, 1.0, 3.5])
+def test_idempotent_on_constant_input(thr):
+    _check_idempotent_on_constant(thr, seed=11)
+
+
+@pytest.mark.parametrize("thr,split", [(0.0, 3), (2.0, 1), (5.0, 6)])
+def test_chunked_equals_oneshot(thr, split):
+    _check_chunked_equals_oneshot(thr, seed=2, split=split)
+
+
+@pytest.mark.parametrize("thr", [0.0, 2.0])
+def test_counter_conservation(thr):
+    _check_conservation(thr, seed=4)
+
+
+# ------------------------------------------------- fuzzed tier (optional)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(thr=st.floats(0.0, 8.0, allow_nan=False),
+           seed=st.integers(0, 2 ** 16))
+    def test_idempotent_on_constant_input_fuzzed(thr, seed):
+        _check_idempotent_on_constant(thr, seed)
+
+    @settings(max_examples=10, deadline=None)
+    @given(thr=st.floats(0.0, 8.0, allow_nan=False),
+           seed=st.integers(0, 2 ** 8), split=st.integers(1, 6))
+    def test_chunked_equals_oneshot_fuzzed(thr, seed, split):
+        _check_chunked_equals_oneshot(thr, seed, split)
+
+    @settings(max_examples=25, deadline=None)
+    @given(thr=st.floats(0.0, 16.0, allow_nan=False),
+           seed=st.integers(0, 2 ** 16))
+    def test_counter_conservation_fuzzed(thr, seed):
+        _check_conservation(thr, seed)
+
+
+# ----------------------------------------------------------- table contract
+
+
+def test_delta_table_contract(small_cfg, rng_key):
+    """The delta op table is the ref table plus the gate: discoverable,
+    not MXU-constrained, and delta_gate is None on every other backend."""
+    assert "delta" in backends.available()
+    params = rsnn.init_params(rng_key, small_cfg)
+    eng = _engine(small_cfg, params, "delta", "float")
+    assert eng.ops.delta_gate is not None
+    assert eng.ops.megastep is None
+    assert not eng.ops.mxu_aligned
+    for other in ("jnp", "fused"):
+        assert _engine(small_cfg, params, other, "float").ops.delta_gate \
+            is None

@@ -1,8 +1,10 @@
 """Load-generator harness units: percentile math, workload determinism,
-lifecycle timestamps, BENCH schema validation, and trajectory compare
-flagging — plus the benchmark driver's no-match guard (a typo'd ``--only``
-must fail, not pass green running nothing)."""
+lifecycle timestamps, saturation-search probe ordering, BENCH schema
+validation, and trajectory compare flagging — plus the benchmark driver's
+no-match guard (a typo'd ``--only`` must fail, not pass green running
+nothing)."""
 
+import json
 import sys
 from pathlib import Path
 
@@ -148,6 +150,81 @@ def test_run_workload_collects_stats(tiny_loop_factory):
     assert res.max_backlog == 4
 
 
+# ----------------------------------------------------- saturation search
+
+
+class _StubLoop:
+    """Just enough loop surface for find_saturation: the backlog bound
+    reads ``slots`` and ``_fresh`` clears ``finished`` / resets metrics."""
+
+    def __init__(self, slots=2):
+        self.slots = slots
+        self.finished = []
+
+    def reset_metrics(self):
+        pass
+
+
+def _deterministic_run_workload(capacity: float):
+    """A timing-free stand-in for ``run_workload``: arrivals beyond
+    ``capacity`` streams/s pile up linearly, below it the queue stays at
+    the probe floor.  Monotone in rate by construction, so the test
+    asserts the *search's* ordering guarantees, not scheduler timing."""
+
+    def fake(loop, wl):
+        backlog = int(max(0.0, wl.rate - capacity)) + 1
+        return loadgen.RunResult(
+            streams=wl.num_streams, frames=wl.num_streams * 4, wall_s=1.0,
+            step_us=[10.0], completion_ms=[float(backlog)],
+            queue_wait_ms=[0.0], max_backlog=backlog, steps=4, host_syncs=1)
+
+    return fake
+
+
+def test_find_saturation_probes_monotone_in_rate(monkeypatch):
+    """Latent-gap regression: probe records, ordered by probed rate, must
+    have monotone non-decreasing backlog and a downward-closed bounded
+    verdict (every rate below a bounded probe is bounded, every rate above
+    an unbounded probe is unbounded) when the underlying queue model is
+    monotone.  The reported saturation rate must sit exactly on the
+    bounded/unbounded frontier of the probes."""
+    monkeypatch.setattr(loadgen, "run_workload",
+                        _deterministic_run_workload(capacity=10.0))
+    loop = _StubLoop(slots=2)  # backlog bound = max(2*slots, 4) = 4
+    wl = loadgen.Workload(seed=0, num_streams=8)
+    sat = loadgen.find_saturation(loop, wl, service_rate=10.0, iters=4)
+
+    probes = sorted(sat["probes"], key=lambda p: p["rate_streams_per_s"])
+    assert len(probes) >= 2
+    backlogs = [p["max_backlog"] for p in probes]
+    assert backlogs == sorted(backlogs)  # monotone in rate
+    verdicts = [p["bounded"] for p in probes]
+    # downward-closed: True..True False..False, never interleaved
+    assert verdicts == sorted(verdicts, reverse=True)
+    assert verdicts[0] and not verdicts[-1]  # the bracket saw both sides
+
+    best_bounded = max(p["rate_streams_per_s"] for p in probes
+                       if p["bounded"])
+    worst_unbounded = min(p["rate_streams_per_s"] for p in probes
+                          if not p["bounded"])
+    assert sat["streams_per_s"] == best_bounded < worst_unbounded
+    assert sat["backlog_bound"] == 4
+    # the model saturates at capacity + bound; the bisection must have
+    # tightened the bracket to within (hi-lo)/2^iters of it
+    assert 10.0 <= sat["streams_per_s"] <= 14.0
+
+
+def test_find_saturation_never_saturates_reports_top_probe(monkeypatch):
+    """When no probe exceeds the bound, the search reports the highest
+    probed rate instead of bisecting against a missing upper bracket."""
+    monkeypatch.setattr(loadgen, "run_workload",
+                        _deterministic_run_workload(capacity=1e9))
+    sat = loadgen.find_saturation(_StubLoop(), loadgen.Workload(seed=0),
+                                  service_rate=10.0, iters=3)
+    assert all(p["bounded"] for p in sat["probes"])
+    assert sat["streams_per_s"] == 16.0  # the 1.6x upper bracket
+
+
 # ------------------------------------------------- BENCH schema + compare
 
 
@@ -280,6 +357,34 @@ def test_schema_v1_doc_still_validates_and_compares():
     bad = _doc()
     del bad["cells"][0]["backend"]
     assert any("backend" in e for e in trajectory.validate_doc(bad))
+
+
+def test_delta_backend_cell_identity_roundtrips(tmp_path):
+    """Schema-v2 regression: the ``backend`` cell-identity field survives a
+    JSON round trip and keys the compare — a ``delta`` cell matches only a
+    ``delta`` baseline cell, never the ``jnp`` cell it forked from."""
+    assert "delta" in loadgen.BACKENDS  # the sweep can produce such cells
+
+    base = _doc(key="slots2-depth0-csc-delta-mesh1", backend="delta")
+    assert trajectory.validate_doc(base) == []
+
+    # round trip through disk exactly the way trajectory compare reads it
+    p = tmp_path / "BENCH_base.json"
+    p.write_text(json.dumps(base))
+    loaded = json.loads(p.read_text())
+    assert loaded["cells"][0]["backend"] == "delta"
+
+    new = _doc(key="slots2-depth0-csc-delta-mesh1", backend="delta",
+               p50=110.0)  # +10%: matched, under threshold
+    same = trajectory.compare_docs(new, loaded, threshold=0.5)
+    assert same["matched_cells"] == 1
+    assert same["regressions"] == []
+
+    # backend is part of the cell identity: delta vs jnp never match even
+    # at identical slots/depth/layout/mesh
+    cross = trajectory.compare_docs(new, _doc(), threshold=0.5)
+    assert cross["matched_cells"] == 0
+    assert any("no baseline" in ln for ln in cross["lines"])
 
 
 def test_bench_files_numeric_order(tmp_path):
