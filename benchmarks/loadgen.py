@@ -37,19 +37,22 @@ Harness shape
 
 Results are written as a schema-versioned ``BENCH_<n>.json`` (machine
 fingerprint, git SHA, per-cell stats over the ``{slots x pipeline_depth x
-layout(csc,nm) x backend(jnp,pallas,fused,delta) x mesh}`` sweep, measured
-sparsity from the live ``SparsityCounters``) — the persisted perf
-trajectory that ``benchmarks/trajectory.py compare`` diffs across PRs.
-The backend axis (schema v2) puts the single-dispatch mega-step
-(``kernels/megastep.py``) in the trajectory next to the per-op ``jnp``
-and ``pallas`` tables; it lives in the *cell* identity, not the model
-identity, so v2 docs stay comparable against the v1 ``BENCH_6.json``.
+layout(csc,nm) x backend(jnp,pallas,fused,delta) x chunk_frames x mesh}``
+sweep, measured sparsity from the live ``SparsityCounters``) — the
+persisted perf trajectory that ``benchmarks/trajectory.py compare`` diffs
+across PRs.  The backend axis (schema v2) puts the single-dispatch
+mega-step (``kernels/megastep.py``) in the trajectory next to the per-op
+``jnp`` and ``pallas`` tables; the chunk_frames axis (schema v3) adds
+frame-chunked dispatch with a traced ``dispatches_per_frame`` stat.  Both
+live in the *cell* identity, not the model identity, and default
+(``jnp``/``1``) when absent, so newer docs stay comparable against older
+baselines.
 
 CLI::
 
-    python -m benchmarks.loadgen --smoke            # tiny CI sweep -> BENCH_8.json
+    python -m benchmarks.loadgen --smoke            # tiny CI sweep -> BENCH_9.json
     python -m benchmarks.loadgen --slots 1,4 --depths 0,2 --layouts csc,nm \
-        --backends jnp,fused
+        --backends jnp,fused --chunks 1,8
     python -m benchmarks.trajectory compare BENCH_new.json   # then diff it
 """
 
@@ -83,7 +86,7 @@ from repro.serving.sharded import ShardedStreamLoop, stream_mesh  # noqa: E402
 from repro.serving.stream import (CompiledRSNN, EngineConfig,  # noqa: E402
                                   StreamLoop)
 
-BENCH_INDEX = 8  # this PR's trajectory point: BENCH_8.json
+BENCH_INDEX = 9  # this PR's trajectory point: BENCH_9.json
 INPUT_SCALE = 0.05  # static 8-bit calibration used across the benches
 LAYOUT_TAGS = {"csc": "csc", "nm": "nm_group"}
 BACKENDS = ("jnp", "pallas", "fused", "delta")  # sweepable engine backends
@@ -196,13 +199,16 @@ def build_engine(cfg: RSNNConfig, layout: str, seed: int = 0,
 
 
 def build_loop(engine: CompiledRSNN, slots: int, depth: int, mesh: int,
-               max_frames: int) -> StreamLoop:
+               max_frames: int, chunk: int = 1) -> StreamLoop:
     """One sweep cell's loop: single-device StreamLoop at ``mesh == 1``,
     ShardedStreamLoop over the first ``mesh`` local devices otherwise."""
     ring = max(max_frames, 8)
+    # the pipelined chunked contract requires ring % chunk == 0 (a live
+    # stream must never idle mid-chunk on ring capacity)
+    ring = (ring + chunk - 1) // chunk * chunk
     if mesh == 1:
         return StreamLoop(engine, batch_slots=slots, pipeline_depth=depth,
-                          ring_frames=ring)
+                          ring_frames=ring, chunk_frames=chunk)
     devices = jax.devices()
     if mesh > len(devices):
         raise ValueError(f"mesh size {mesh} exceeds the {len(devices)} "
@@ -210,7 +216,7 @@ def build_loop(engine: CompiledRSNN, slots: int, depth: int, mesh: int,
     return ShardedStreamLoop(engine, batch_slots=slots,
                              mesh=stream_mesh(devices[:mesh]),
                              max_frames=ring, pipeline_depth=depth,
-                             ring_frames=ring)
+                             ring_frames=ring, chunk_frames=chunk)
 
 
 def warm(loop: StreamLoop, input_dim: int, frames: int = 4,
@@ -241,6 +247,8 @@ class RunResult:
     max_backlog: int  # peak submit-queue depth observed
     steps: int
     host_syncs: int
+    dispatches: int  # device step dispatches (1/frame unchunked, ~1/C chunked)
+    frames_served: int  # real (non-idle) frames advanced across dispatches
 
     @property
     def frames_per_s(self) -> float:
@@ -293,7 +301,9 @@ def run_workload(loop: StreamLoop, wl: Workload) -> RunResult:
         queue_wait_ms=[(r.t_start - r.t_submit) * 1e3 for r in done],
         max_backlog=max_backlog,
         steps=loop.steps,
-        host_syncs=loop.host_syncs)
+        host_syncs=loop.host_syncs,
+        dispatches=loop.dispatches,
+        frames_served=loop.frames_served)
 
 
 def _fresh(loop: StreamLoop) -> None:
@@ -391,10 +401,11 @@ def _sparsity_dict(loop: StreamLoop) -> dict:
 
 
 def run_cell(engine: CompiledRSNN, layout: str, backend: str, slots: int,
-             depth: int, mesh: int, wl: Workload, sat_iters: int) -> dict:
+             depth: int, mesh: int, wl: Workload, sat_iters: int,
+             chunk: int = 1) -> dict:
     """One sweep cell: warm-up, closed-loop service measurement, open-loop
     run at 70% of the measured service rate, saturation search."""
-    loop = build_loop(engine, slots, depth, mesh, wl.max_frames)
+    loop = build_loop(engine, slots, depth, mesh, wl.max_frames, chunk)
     warm(loop, engine.cfg.input_dim)
 
     closed = run_workload(loop, wl)
@@ -409,14 +420,18 @@ def run_cell(engine: CompiledRSNN, layout: str, backend: str, slots: int,
     sat = find_saturation(loop, wl, service_rate, sat_iters)
 
     return {
-        "key": f"slots{slots}-depth{depth}-{layout}-{backend}-mesh{mesh}",
+        "key": f"slots{slots}-depth{depth}-{layout}-{backend}"
+               f"-chunk{chunk}-mesh{mesh}",
         "slots": slots,
         "pipeline_depth": depth,
         "layout": layout,
         "backend": backend,
+        "chunk_frames": chunk,
         "mesh": mesh,
         "streams": closed.streams,
         "frames": closed.frames,
+        "dispatches_per_frame": round(
+            closed.dispatches / max(closed.frames_served, 1), 4),
         "frame_latency_us": latency_stats(closed.step_us),
         "stream_completion_ms": latency_stats(open_res.completion_ms),
         "queue_wait_ms": latency_stats(open_res.queue_wait_ms),
@@ -451,8 +466,10 @@ def git_sha() -> str:
 
 
 def run_sweep(cfg: RSNNConfig, slots_list, depths, layouts, meshes,
-              wl: Workload, sat_iters: int, backends=("jnp",)) -> dict:
-    """The ``{slots x depth x layout x backend x mesh}`` sweep -> BENCH doc."""
+              wl: Workload, sat_iters: int, backends=("jnp",),
+              chunks=(1,)) -> dict:
+    """The ``{slots x depth x layout x backend x chunk x mesh}`` sweep ->
+    BENCH doc."""
     cells = []
     for layout in layouts:
         for backend in backends:
@@ -460,11 +477,14 @@ def run_sweep(cfg: RSNNConfig, slots_list, depths, layouts, meshes,
             for mesh in sorted(meshes):
                 for slots in slots_list:
                     for depth in depths:
-                        print(f"[loadgen] cell slots={slots} depth={depth} "
-                              f"layout={layout} backend={backend} "
-                              f"mesh={mesh} ...", flush=True)
-                        cells.append(run_cell(engine, layout, backend, slots,
-                                              depth, mesh, wl, sat_iters))
+                        for chunk in chunks:
+                            print(f"[loadgen] cell slots={slots} "
+                                  f"depth={depth} layout={layout} "
+                                  f"backend={backend} chunk={chunk} "
+                                  f"mesh={mesh} ...", flush=True)
+                            cells.append(run_cell(engine, layout, backend,
+                                                  slots, depth, mesh, wl,
+                                                  sat_iters, chunk))
     ab = deque_refill_ab()
     doc = {
         "schema_version": trajectory.SCHEMA_VERSION,
@@ -481,9 +501,16 @@ def run_sweep(cfg: RSNNConfig, slots_list, depths, layouts, meshes,
                   "precision": "int4", "fc_prune": "2:4"},
         "workload": wl.identity(),
         "latency_definitions": {
-            "frame_latency_us": "wall time of one step_once (one frame "
-                                "advanced across all active slots), closed "
-                                "loop, warm-up excluded",
+            "frame_latency_us": "wall time of one step_once (one dispatch: "
+                                "one frame advanced across all active slots "
+                                "unchunked, up to chunk_frames frames per "
+                                "slot chunked), closed loop, warm-up "
+                                "excluded",
+            "dispatches_per_frame": "device dispatches / non-idle frames "
+                                    "served, closed loop; one dispatch "
+                                    "covers every active slot, so ~1/slots "
+                                    "unchunked and ~1/(slots*chunk_frames) "
+                                    "chunked — chunking divides it by C",
             "stream_completion_ms": "t_harvest - t_submit per stream, open "
                                     "loop at 0.7x the measured service rate",
             "queue_wait_ms": "t_start - t_submit per stream, same open-"
@@ -523,13 +550,17 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI sweep: 2 slots, depths {0,2}, csc+nm, "
-                         "jnp+fused+delta, mesh 1, small model")
+                         "jnp+fused+delta, chunks {1,4} on the fused "
+                         "backend, mesh 1, small model")
     ap.add_argument("--out", default=str(ROOT / f"BENCH_{BENCH_INDEX}.json"))
     ap.add_argument("--slots", default="1,4")
     ap.add_argument("--depths", default="0,2")
     ap.add_argument("--layouts", default="csc,nm")
     ap.add_argument("--backends", default="jnp,fused",
                     help=f"engine backends to sweep, from {BACKENDS}")
+    ap.add_argument("--chunks", default="1,8",
+                    help="chunk_frames values to sweep (frames staged per "
+                         "device dispatch; 1 = classic per-frame stepping)")
     ap.add_argument("--meshes", default="1")
     ap.add_argument("--streams", type=int, default=24)
     ap.add_argument("--min-frames", type=int, default=12)
@@ -546,6 +577,11 @@ def main(argv=None) -> int:
         slots_list, depths, meshes = [2], [0, 2], [1]
         layouts = ["csc", "nm"]
         backends = ["jnp", "fused", "delta"]
+        # chunk 4 next to the per-frame baseline keeps the
+        # dispatches_per_frame 1 -> 1/C amortization on the CI trajectory
+        # for every backend (bit parity is proven separately in
+        # tests/test_stream_chunked.py; this traces the perf side)
+        chunks = [1, 4]
         wl = Workload(seed=args.seed, num_streams=8, min_frames=8,
                       max_frames=20)
         sat_iters = 1
@@ -554,6 +590,7 @@ def main(argv=None) -> int:
         slots_list = _parse_ints(args.slots)
         depths = _parse_ints(args.depths)
         meshes = _parse_ints(args.meshes)
+        chunks = _parse_ints(args.chunks)
         layouts = [s.strip() for s in args.layouts.split(",") if s.strip()]
         backends = [s.strip() for s in args.backends.split(",") if s.strip()]
         wl = Workload(seed=args.seed, num_streams=args.streams,
@@ -566,9 +603,11 @@ def main(argv=None) -> int:
     for bk in backends:
         if bk not in BACKENDS:
             ap.error(f"unknown backend {bk!r}; choose from {BACKENDS}")
+    if not chunks or any(c < 1 for c in chunks):
+        ap.error(f"--chunks must be positive integers, got {chunks}")
 
     doc = run_sweep(cfg, slots_list, depths, layouts, meshes, wl, sat_iters,
-                    backends=backends)
+                    backends=backends, chunks=chunks)
     out = Path(args.out)
     out.write_text(json.dumps(doc, indent=2) + "\n")
     print(f"[loadgen] wrote {out} ({len(doc['cells'])} cells, "

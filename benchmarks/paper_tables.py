@@ -138,7 +138,10 @@ def _measured_sparsity() -> C.SparsityProfile | None:
 
 
 def time_us(fn, *args, iters: int = 20) -> float:
-    fn(*args)  # compile
+    # fence the warmup: without block_until_ready the async-dispatched
+    # compile+run can still be in flight when the timer starts, so the
+    # first timed iteration absorbs a tail of warmup work
+    jax.block_until_ready(fn(*args))  # compile
     t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)
@@ -245,13 +248,14 @@ def bench_stream_pipeline():
                                    cfg.input_dim)).astype(np.float32)
             for _ in range(6)]
 
-    def run_loop(depth):
-        # ring sized to the workload (<= 80-frame utterances): on CPU the
-        # un-donated ring update pays a copy per step, so an oversized ring
-        # is pure overhead; watermark flush covers any longer stream
+    def run_loop(depth, chunk=1):
+        # ring sized to the workload (<= 80-frame utterances, and a
+        # multiple of every chunk size used here); watermark flush covers
+        # any longer stream.  Loop construction AOT-warms the donated step
+        # executables, so the throwaway serve only warms host-side paths.
         loop = StreamLoop(engine, batch_slots=1, pipeline_depth=depth,
-                          ring_frames=96)
-        loop.submit(utts[0][:4])  # warm the jitted step outside the timing
+                          ring_frames=96, chunk_frames=chunk)
+        loop.submit(utts[0][:4])  # warm host-side paths outside the timing
         loop.run()
         loop.finished.clear()
         loop.reset_metrics()
@@ -261,11 +265,13 @@ def bench_stream_pipeline():
         loop.run()
         dt = time.perf_counter() - t0
         frames = int(loop.counters.frames)
-        return dt / max(loop.steps, 1) * 1e6, loop.host_syncs, frames
+        return (dt / max(loop.steps, 1) * 1e6, loop.host_syncs, frames,
+                loop.dispatches, dt)
 
-    sync_us, sync_syncs, frames = run_loop(0)
-    pipe_us, pipe_syncs, frames2 = run_loop(2)
-    assert frames == frames2
+    sync_us, sync_syncs, frames, _, _ = run_loop(0)
+    pipe_us, pipe_syncs, frames2, pipe_disp, pipe_dt = run_loop(2)
+    _, _, frames3, chunk_disp, chunk_dt = run_loop(2, chunk=8)
+    assert frames == frames2 == frames3
     return pipe_us, {
         "workload": f"{len(utts)} streams / {frames} frames, 1 slot, int4",
         "sync_us_per_step": round(sync_us, 2),
@@ -274,8 +280,13 @@ def bench_stream_pipeline():
         "pipelined_host_syncs_per_frame": round(pipe_syncs / frames, 3),
         "host_syncs_saved_per_frame": round(
             (sync_syncs - pipe_syncs) / frames, 3),
-        "note": "CPU us/step pays an un-donated ring copy per step; the "
-                "contract's win is the per-frame transfer count",
+        "pipelined_dispatches_per_frame": round(pipe_disp / frames, 3),
+        "chunked_dispatches_per_frame": round(chunk_disp / frames, 3),
+        "pipelined_us_per_frame": round(pipe_dt / frames * 1e6, 3),
+        "chunked_us_per_frame": round(chunk_dt / frames * 1e6, 3),
+        "note": "chunk_frames=8 row amortizes one dispatch over 8 frames "
+                "(bit-identical logits); state/ring/counters are donated so "
+                "no per-step buffer copies remain",
     }
 
 
@@ -562,7 +573,7 @@ def bench_megastep():
         def step(xq):
             return engine.step(state, xq)
 
-        step(xq)  # compile
+        jax.block_until_ready(step(xq))  # compile, fenced before timing
         samples = []
         for _ in range(30):
             t0 = time.perf_counter()
@@ -651,7 +662,7 @@ def bench_delta():
 
     state = timed_engine.init_state(2)
     xq = timed_engine.quantize_features(jnp.asarray(utts[0][:2]))
-    timed_engine.step(state, xq)  # compile
+    jax.block_until_ready(timed_engine.step(state, xq))  # compile, fenced
     samples = []
     for _ in range(30):
         t0 = time.perf_counter()

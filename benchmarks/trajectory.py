@@ -14,8 +14,9 @@ Subcommands::
     python -m benchmarks.trajectory show
 
 ``compare`` matches cells by identity tuple (``slots/depth/layout/
-backend/mesh``; a schema-v1 cell's backend defaults to ``jnp``, so v2
-docs diff cleanly against the v1 ``BENCH_6.json``) and flags a regression
+backend/chunk_frames/mesh``; a schema-v1 cell's backend defaults to
+``jnp`` and a pre-v3 cell's chunk_frames to ``1``, so newer docs diff
+cleanly against older baselines) and flags a regression
 when a latency percentile rises — or saturation/throughput falls — by
 more than ``--threshold`` (relative).  Latency is
 machine-dependent: when the two files carry different machine
@@ -35,8 +36,11 @@ from pathlib import Path
 
 ROOT = Path(__file__).resolve().parents[1]
 
-SCHEMA_VERSION = 2  # v2 (BENCH_7+): cells carry a "backend" identity axis
-SUPPORTED_SCHEMA_VERSIONS = (1, 2)
+# v2 (BENCH_7+): cells carry a "backend" identity axis
+# v3 (BENCH_9+): cells carry a "chunk_frames" identity axis and a traced
+# "dispatches_per_frame" stat (frame-chunked dispatch amortization)
+SCHEMA_VERSION = 3
+SUPPORTED_SCHEMA_VERSIONS = (1, 2, 3)
 
 BENCH_NAME = re.compile(r"^BENCH_(\d+)\.json$")
 
@@ -104,6 +108,9 @@ def validate_doc(doc) -> list[str]:
     required_cell = dict(_REQUIRED_CELL)
     if doc["schema_version"] >= 2:
         required_cell["backend"] = str  # the v2 identity axis
+    if doc["schema_version"] >= 3:
+        required_cell["chunk_frames"] = int  # the v3 identity axis
+        required_cell["dispatches_per_frame"] = (int, float)
     seen = set()
     for i, cell in enumerate(doc["cells"]):
         where = f"cells[{i}]"
@@ -172,9 +179,14 @@ def _cell_identity(cell: dict) -> tuple:
     A v1 cell predates the backend axis; it was always served by the
     ``jnp`` backend, so it defaults there — a v2 run's jnp cells line up
     against the v1 baseline and the other backends show up as new cells.
+    Likewise a pre-v3 cell predates frame chunking and was always served
+    one frame per dispatch, so chunk_frames defaults to 1 — a v3 run's
+    unchunked cells line up against v1/v2 baselines and the chunked cells
+    show up as new.
     """
     return (cell["slots"], cell["pipeline_depth"], cell["layout"],
-            cell.get("backend", "jnp"), cell["mesh"])
+            cell.get("backend", "jnp"), cell.get("chunk_frames", 1),
+            cell["mesh"])
 
 
 def _model_identity(doc: dict) -> dict:

@@ -34,7 +34,8 @@ import numpy as np
 _DONE = object()
 
 
-def prefetch_depth(batch_slots: int, pipeline_depth: int = 2) -> int:
+def prefetch_depth(batch_slots: int, pipeline_depth: int = 2,
+                   chunk_frames: int = 1) -> int:
     """Prefetch depth that keeps a pipelined slot loop fed.
 
     One quantized utterance ready per slot, plus one per in-flight device
@@ -44,8 +45,22 @@ def prefetch_depth(batch_slots: int, pipeline_depth: int = 2) -> int:
     6
     >>> prefetch_depth(1, 0)  # synchronous v1 loop: still double-buffered
     2
+
+    A chunked loop (``chunk_frames=C > 1``) retires up to a whole chunk of
+    frames per slot per dispatch, so in the worst case (short utterances)
+    every in-flight dispatch can complete a stream in *every* slot — the
+    queue must cover ``slots * (pipeline_depth + 1) * C`` demand so a burst
+    of chunk-boundary refills never starves on the worker:
+
+    >>> prefetch_depth(2, 2, chunk_frames=4)
+    24
+    >>> prefetch_depth(4, 2, chunk_frames=1)  # C=1 keeps the v2 sizing
+    6
     """
-    return max(batch_slots + max(pipeline_depth, 1), 2)
+    base = max(batch_slots + max(pipeline_depth, 1), 2)
+    if chunk_frames <= 1:
+        return base
+    return max(base, batch_slots * (pipeline_depth + 1) * chunk_frames)
 
 
 class AsyncFeaturizer:
@@ -63,16 +78,17 @@ class AsyncFeaturizer:
                  featurize: Callable[[np.ndarray], np.ndarray] | None = None,
                  depth: int | None = None) -> "AsyncFeaturizer":
         """Front-end sized for a slot loop: ``depth`` defaults to
-        ``prefetch_depth(loop.slots, loop.pipeline_depth)`` and
-        ``featurize`` to the loop engine's static-scale input quantizer
-        (feed the result to ``submit``/``submit_stream`` with
-        ``quantized=True``)."""
+        ``prefetch_depth(loop.slots, loop.pipeline_depth,
+        loop.chunk_frames)`` and ``featurize`` to the loop engine's
+        static-scale input quantizer (feed the result to
+        ``submit``/``submit_stream`` with ``quantized=True``)."""
         if featurize is None:
             engine = loop.engine
             featurize = lambda u: np.asarray(  # noqa: E731
                 engine.quantize_features(u))
         if depth is None:
-            depth = prefetch_depth(loop.slots, loop.pipeline_depth)
+            depth = prefetch_depth(loop.slots, loop.pipeline_depth,
+                                   getattr(loop, "chunk_frames", 1))
         return cls(utterances, featurize, depth=depth)
 
     def __init__(self, utterances: Iterable[np.ndarray],

@@ -86,9 +86,13 @@ class OpTable(NamedTuple):
     """Uniform per-backend op set consumed by ``CompiledRSNN``.
 
     ``megastep``, when set, supersedes the per-op fields: the engine's
-    frame step becomes that one call — ``(state, x_t, lif) -> (new_state,
-    logits, aux)`` with ``aux`` matching ``stream._frame_counters`` — and
-    the per-op entries are never invoked.
+    frame step becomes that one call.  The binding is *chunk-native* —
+    ``(state, x_chunk (F, B, input_dim), lif) -> (new_state, logits
+    (F, B, fc_dim), aux)`` with every ``aux`` value carrying a leading
+    frame axis over ``stream._frame_counters``'s per-frame shapes — so the
+    serving loops feed the kernel's F-frame chunk axis directly (one
+    dispatch per ``chunk_frames``); a single-frame step is the ``F=1``
+    special case.  The per-op entries are never invoked.
 
     ``delta_gate``, when set, makes the engine carry delta step state
     (``stream.DeltaRSNNState``: held inputs + cached input-layer
@@ -287,9 +291,12 @@ def _build_fused(ctx: BackendContext) -> OpTable:
     else:
         fc_mode, fcargs, statics = layouts.layout_of(fct).megastep_fc(fct)
 
-    def megastep(state: RSNNState, x_t: jax.Array, lif: dict):
+    def megastep(state: RSNNState, x_chunk: jax.Array, lif: dict):
+        # chunk-native: x_chunk is (F, B, input_dim) and maps onto the
+        # kernel's frame-chunk grid axis — F frames advance in ONE Pallas
+        # dispatch with the weights staying VMEM-resident across the chunk
         outs = ops.megastep(
-            x_t[None], state.h0, state.lif0.u, state.lif0.spike,
+            x_chunk, state.h0, state.lif0.u, state.lif0.spike,
             state.h1, state.lif1.u, state.lif1.spike,
             lif["beta0"], lif["vth0"], lif["beta1"], lif["vth1"],
             wargs, fcargs, precision=ctx.precision, fc_mode=fc_mode,
@@ -298,11 +305,11 @@ def _build_fused(ctx: BackendContext) -> OpTable:
         new_state = RSNNState(h0=s0, h1=s1,
                               lif0=LIFState(u=u0, spike=s0[-1]),
                               lif1=LIFState(u=u1, spike=s1[-1]))
-        zero = jnp.zeros_like(bits[0])  # no delta gating in the mega-step
-        aux = {"spikes_l0": sp0[0], "spikes_l1": sp1[0],
-               "union_l1": union[0], "input_one_bits": bits[0],
+        zero = jnp.zeros_like(bits)  # no delta gating in the mega-step
+        aux = {"spikes_l0": sp0, "spikes_l1": sp1,
+               "union_l1": union, "input_one_bits": bits,
                "delta_propagated": zero, "delta_skipped": zero}
-        return new_state, logits[0], aux
+        return new_state, logits, aux
 
     def _collapsed(op: str) -> Callable:
         def call(*_a, **_k):

@@ -78,7 +78,8 @@ class ShardedStreamLoop(StreamLoop):
     def __init__(self, engine: CompiledRSNN, batch_slots: int | None = None,
                  mesh: Mesh | None = None, max_frames: int = 1024,
                  pipeline_depth: int = 2, ring_frames: int | None = None,
-                 track_sparsity: bool = True):
+                 track_sparsity: bool = True, chunk_frames: int = 1,
+                 aot_warmup: bool = True):
         self.mesh = mesh if mesh is not None else stream_mesh()
         ndev = self.mesh.shape["data"]
         slots = batch_slots if batch_slots is not None else ndev
@@ -89,6 +90,7 @@ class ShardedStreamLoop(StreamLoop):
         self._rep = NamedSharding(self.mesh, P())
         self._slot = NamedSharding(self.mesh, P("data"))
         self._ctrl = NamedSharding(self.mesh, P(None, "data"))
+        self._ctrl3 = NamedSharding(self.mesh, P(None, None, "data"))
         engine.place_weights(self._rep)
 
         # streams are capped at max_frames, so the ring never needs more
@@ -96,17 +98,33 @@ class ShardedStreamLoop(StreamLoop):
                    max_frames)
         super().__init__(engine, batch_slots=slots,
                          pipeline_depth=pipeline_depth, ring_frames=ring,
-                         track_sparsity=track_sparsity)
+                         track_sparsity=track_sparsity,
+                         chunk_frames=chunk_frames, aot_warmup=aot_warmup)
         self.state = jax.device_put(
             self.state, shd.stream_shardings(self.state, self.mesh))
         self._buf = jax.device_put(
             jnp.zeros((slots, max_frames, engine.cfg.input_dim), jnp.float32),
             NamedSharding(self.mesh, shd.stream_ring_spec()))
+        # the loop-carried buffers (state, and for the pipelined contract
+        # the ring + counter accumulator) are donated so their updates are
+        # in-place; the pinned frame buffer is read-only in-step and reused
+        # across steps, so it is NOT donated
         self._jit_step = jax.jit(self._device_step, donate_argnums=(0,))
         self._jit_ring_step = jax.jit(self._device_ring_step,
-                                      donate_argnums=(0,))
+                                      donate_argnums=(0, 3, 4))
         self._jit_ring_quiet = jax.jit(self._device_ring_step_quiet,
+                                       donate_argnums=(0, 3))
+        self._jit_chunk_step = jax.jit(self._device_chunk_step,
                                        donate_argnums=(0,))
+        self._jit_ring_chunk = jax.jit(self._device_ring_chunk,
+                                       donate_argnums=(0, 3, 4))
+        self._jit_ring_chunk_quiet = jax.jit(self._device_ring_chunk_quiet,
+                                             donate_argnums=(0, 3))
+        # the base constructor's binding/warmup ran before these jits (and
+        # the placed buffers) existed and early-returned; do it for real now
+        self._bind_step_fns()
+        if aot_warmup:
+            self._warm_executables()
 
     # --------------------------------------------------- sharded placement
 
@@ -190,6 +208,33 @@ class ShardedStreamLoop(StreamLoop):
         x = self._gather_frames(buf, pos, active)
         return self.engine._ring_frame_step_quiet(state, x, ring, ring_idx)
 
+    def _gather_chunk_frames(self, buf, pos, active):
+        """Chunked device-side gather: per-sub-step cursors ``pos`` (F,
+        slots) -> (F, slots, input_dim) frames, idle sub-steps zeroed."""
+        idx = jnp.clip(pos, 0, self.max_frames - 1)
+        x = jnp.take_along_axis(buf, idx.T[:, :, None], axis=1)
+        x = jnp.swapaxes(x, 0, 1)
+        return jnp.where(active[:, :, None], x, jnp.zeros_like(x))
+
+    def _device_chunk_step(self, state, buf, pos, active):
+        """Chunked ``_device_step``: F frames per slot in one dispatch."""
+        x = self._gather_chunk_frames(buf, pos, active)
+        return self.engine._masked_chunk_step(state, x, active)
+
+    def _device_ring_chunk(self, state, buf, ctrl, ring, aux_acc):
+        """Chunked ``_device_ring_step``: ``ctrl`` is the packed
+        (3, F, slots) int32 word — per-sub-step frame cursor, fill mask,
+        and ring write index (``ring_frames``, i.e. dropped, when idle)."""
+        pos, active, ring_idx = ctrl[0], ctrl[1].astype(bool), ctrl[2]
+        x = self._gather_chunk_frames(buf, pos, active)
+        return self.engine._ring_chunk_step(state, x, active, ring, ring_idx,
+                                            aux_acc)
+
+    def _device_ring_chunk_quiet(self, state, buf, ctrl, ring):
+        pos, active, ring_idx = ctrl[0], ctrl[1].astype(bool), ctrl[2]
+        x = self._gather_chunk_frames(buf, pos, active)
+        return self.engine._ring_chunk_step_quiet(state, x, ring, ring_idx)
+
     def _on_slot_filled(self, i: int, req: StreamRequest) -> None:
         """Pin the slot's quantized frames into its device buffer row.
 
@@ -203,7 +248,7 @@ class ShardedStreamLoop(StreamLoop):
     def _dispatch_step(self, active: np.ndarray):
         pos = jax.device_put(np.asarray(self.slot_pos, np.int32), self._slot)
         act = jax.device_put(active, self._slot)
-        self.state, logits, aux_vec = self._jit_step(
+        self.state, logits, aux_vec = self._fn_step(
             self.state, self._buf, pos, act)
         return np.asarray(logits), aux_vec
 
@@ -213,8 +258,80 @@ class ShardedStreamLoop(StreamLoop):
         word[1:] = ctrl  # [active mask; ring idx] from the base loop
         word_d = jax.device_put(word, self._ctrl)
         if self.counters is None:
-            self.state, self._ring = self._jit_ring_quiet(
+            self.state, self._ring = self._fn_ring(
                 self.state, self._buf, word_d, self._ring)
         else:
-            self.state, self._ring, self._aux_acc = self._jit_ring_step(
+            self.state, self._ring, self._aux_acc = self._fn_ring(
                 self.state, self._buf, word_d, self._ring, self._aux_acc)
+
+    def _chunk_cursors(self) -> np.ndarray:
+        """Per-sub-step frame cursors (F, slots): the base cursor plus the
+        sub-step offset.  Out-of-range rows (idle sub-steps) are clipped
+        in-graph and masked by the fill mask."""
+        return (np.asarray(self.slot_pos, np.int32)[None, :]
+                + np.arange(self.chunk_frames, dtype=np.int32)[:, None])
+
+    def _dispatch_step_chunk(self, counts: list[int], act: np.ndarray):
+        pos = jax.device_put(self._chunk_cursors(), self._ctrl)
+        actd = jax.device_put(act, self._ctrl)
+        self.state, logits, aux_vec = self._fn_step(
+            self.state, self._buf, pos, actd)
+        return np.asarray(logits), aux_vec
+
+    def _dispatch_ring_chunk(self, counts: list[int],
+                             ctrl: np.ndarray) -> None:
+        word = np.empty((3, self.chunk_frames, self.slots), np.int32)
+        word[0] = self._chunk_cursors()
+        word[1:] = ctrl  # [fill mask; ring idx] from the base loop
+        word_d = jax.device_put(word, self._ctrl3)
+        if self.counters is None:
+            self.state, self._ring = self._fn_ring(
+                self.state, self._buf, word_d, self._ring)
+        else:
+            self.state, self._ring, self._aux_acc = self._fn_ring(
+                self.state, self._buf, word_d, self._ring, self._aux_acc)
+
+    # -------------------------------------------------- executables / warmup
+
+    def _bind_step_fns(self) -> None:
+        if not hasattr(self, "_jit_ring_quiet"):
+            return  # called from super().__init__ before our jits exist
+        if self.chunk_frames == 1:
+            self._fn_step = self._jit_step
+            self._fn_ring = (self._jit_ring_step if self.track_sparsity
+                             else self._jit_ring_quiet)
+        else:
+            self._fn_step = self._jit_chunk_step
+            self._fn_ring = (self._jit_ring_chunk if self.track_sparsity
+                             else self._jit_ring_chunk_quiet)
+
+    def _warm_executables(self) -> None:
+        """AOT-compile the sharded step this loop dispatches.  The jits
+        close over this loop instance (mesh, placed buffers), so the
+        compiled executable lives on the loop, not in the engine's keyed
+        cache; ``lower`` never executes, so lowering against the live
+        placed buffers is free."""
+        if not hasattr(self, "_jit_ring_quiet"):
+            return  # called from super().__init__ before our jits exist
+        c, b = self.chunk_frames, self.slots
+        if self.pipeline_depth == 0:
+            if c == 1:
+                pos = jax.device_put(np.zeros(b, np.int32), self._slot)
+                act = jax.device_put(np.zeros(b, bool), self._slot)
+            else:
+                pos = jax.device_put(np.zeros((c, b), np.int32), self._ctrl)
+                act = jax.device_put(np.zeros((c, b), bool), self._ctrl)
+            self._fn_step = self._fn_step.lower(
+                self.state, self._buf, pos, act).compile()
+        else:
+            if c == 1:
+                word = jax.device_put(np.zeros((3, b), np.int32), self._ctrl)
+            else:
+                word = jax.device_put(np.zeros((3, c, b), np.int32),
+                                      self._ctrl3)
+            args = (self.state, self._buf, word, self._ring)
+            if self.track_sparsity:
+                args += (self._aux_acc,)
+            self._fn_ring = self._fn_ring.lower(*args).compile()
+        self.engine.compile_count += 1
+        self._warm_slot_ops()

@@ -253,6 +253,49 @@ class CompiledRSNN:
         self._step_ring = jax.jit(self._ring_frame_step_fused)
         self._step_ring_quiet = jax.jit(self._ring_frame_step_fused_quiet)
         self._run = jax.jit(self._run_scan)
+        # Donated hot-loop variants: the slot loops thread every
+        # loop-carried buffer (recurrent/delta state, logit ring, counter
+        # accumulator) through these, and donate_argnums lets XLA alias
+        # each output onto its input buffer — the ring update is in-place
+        # instead of an allocate+copy per step.  Donated argnums cover
+        # exactly the buffers with a same-shaped output (state / ring /
+        # aux_acc); the staged frame batch is consumed, not carried, so
+        # donating it could never alias.  These are separate jits from the
+        # public step/step_masked/step_ring API, whose callers may
+        # legitimately reuse their input arrays after the call.
+        self._loop_step_masked = jax.jit(
+            self._masked_frame_step_fused, donate_argnums=(0,))
+        self._loop_step_masked_chunk = jax.jit(
+            self._masked_chunk_step_fused, donate_argnums=(0,))
+        self._loop_step_ring = jax.jit(
+            self._ring_frame_step_fused, donate_argnums=(0, 3, 4))
+        self._loop_step_ring_quiet = jax.jit(
+            self._ring_frame_step_fused_quiet, donate_argnums=(0, 3))
+        self._loop_step_ring_chunk = jax.jit(
+            self._ring_chunk_step_fused, donate_argnums=(0, 3, 4))
+        self._loop_step_ring_chunk_quiet = jax.jit(
+            self._ring_chunk_step_fused_quiet, donate_argnums=(0, 3))
+        # AOT executable cache (jax.jit(...).lower().compile() results),
+        # shared by every loop over this engine; ``compile_count`` moves
+        # only on a real build, so the compile-count regression test can
+        # assert a steady-state serve triggers zero new compiles
+        self._aot_cache: dict = {}
+        self.compile_count = getattr(self, "compile_count", 0)
+
+    def aot_compile(self, key: tuple, jitted, *args):
+        """Ahead-of-time compile ``jitted`` for the given abstract args
+        (``jax.ShapeDtypeStruct`` trees, or concrete arrays — ``lower``
+        never executes), cached under ``key``.  ``jax.jit``'s call cache
+        and ``lower().compile()`` do not share entries, so a loop that
+        warms here must also *dispatch* through the returned executable;
+        the loops bind it at construction (``aot_warmup=True``) and
+        steady-state serving then never compiles."""
+        exe = self._aot_cache.get(key)
+        if exe is None:
+            exe = jitted.lower(*args).compile()
+            self._aot_cache[key] = exe
+            self.compile_count += 1
+        return exe
 
     def place_weights(self, sharding) -> None:
         """``jax.device_put`` every deployed array (dense/quant/CSC weights,
@@ -358,8 +401,12 @@ class CompiledRSNN:
             # FC, and the sparsity counters run inside one kernel with
             # state/weights VMEM-resident (kernels/megastep.py); every
             # loop contract (v1, v2 ring, scan, sharded) funnels here, so
-            # they all inherit the collapsed dispatch
-            return self.ops.megastep(state, x_t, self._lif)
+            # they all inherit the collapsed dispatch.  The binding is
+            # chunk-native — (F, B, input_dim) in, leading frame axis out —
+            # and one frame is its F=1 special case.
+            state, logits, aux = self.ops.megastep(state, x_t[None],
+                                                   self._lif)
+            return state, logits[0], {k: v[0] for k, v in aux.items()}
         if self.ops.delta_gate is not None:
             # delta-temporal gating (EdgeDRNN): propagate only elements
             # with |x_t - x_prev| > threshold, hold the rest, and reuse
@@ -414,6 +461,52 @@ class CompiledRSNN:
         state, logits, aux = self._frame_step(state, x_t)
         return state, logits, pack_step_aux(aux, active)
 
+    def _masked_frame_step_fused(self, state: RSNNState, x_raw: jax.Array,
+                                 active: jax.Array):
+        """v1 loop step with input quantization fused into the dispatch
+        (bit-exact with the eager quantize — see ``_quantize_in_graph``;
+        the integer contract of ``input_scale=None`` is enforced at submit
+        time instead)."""
+        return self._masked_frame_step(state, self._quantize_in_graph(x_raw),
+                                       active)
+
+    # -------------------------------------------------------- chunked steps
+
+    def _chunk_step(self, state, x_chunk: jax.Array):
+        """Advance every slot by a chunk of F frames inside one traced
+        computation: ``x_chunk`` (F, B, input_dim) -> (state, logits
+        (F, B, fc_dim), aux with a leading frame axis).  The mega-step
+        backends run the whole chunk as ONE kernel dispatch over the
+        kernel's native frame-chunk grid axis (weights stay VMEM-resident
+        across the chunk); per-op tables scan the frame step, which still
+        amortizes the Python->device dispatch to one per chunk.  Frame
+        semantics are sequential either way, so a C-frame chunk is
+        bit-identical to C single-frame steps."""
+        if self.ops.megastep is not None:
+            return self.ops.megastep(state, x_chunk, self._lif)
+
+        def body(st, x_t):
+            st, logits, aux = self._frame_step(st, x_t)
+            return st, (logits, aux)
+
+        state, (logits, aux) = jax.lax.scan(body, state, x_chunk)
+        return state, logits, aux
+
+    def _masked_chunk_step(self, state, x_chunk: jax.Array,
+                           active: jax.Array):
+        """Chunked ``_masked_frame_step``: ``active`` is the (F, slots)
+        per-sub-step fill mask — False tail rows are idle padding (a ragged
+        stream tail or a mid-chunk completion), which advance state with
+        zero frames exactly like an idle slot in per-frame stepping and are
+        masked out of the packed counters."""
+        state, logits, aux = self._chunk_step(state, x_chunk)
+        return state, logits, jax.vmap(pack_step_aux)(aux, active).sum(axis=0)
+
+    def _masked_chunk_step_fused(self, state, x_raw: jax.Array,
+                                 active: jax.Array):
+        return self._masked_chunk_step(state, self._quantize_in_graph(x_raw),
+                                       active)
+
     def _ring_write(self, ring: jax.Array, ring_idx: jax.Array,
                     logits: jax.Array) -> jax.Array:
         """Scatter each slot's logits row into its ring position."""
@@ -457,6 +550,47 @@ class CompiledRSNN:
                                      x_raw: jax.Array, ctrl: jax.Array,
                                      ring: jax.Array):
         return self._ring_frame_step_quiet(
+            state, self._quantize_in_graph(x_raw), ring, ctrl[1])
+
+    def _ring_write_chunk(self, ring: jax.Array, ring_idx: jax.Array,
+                          logits: jax.Array) -> jax.Array:
+        """Scatter an (F, B, fc) chunk of logit rows into per-slot ring
+        positions (``ring_idx`` (F, B)).  Idle sub-steps carry
+        ``ring_frames`` — one past the last ring row — and ``mode="drop"``
+        discards those writes, so the idle tail after a mid-chunk
+        completion can never clobber the completed stream's
+        still-harvestable ring rows."""
+        f, b, fc = logits.shape
+        rows = jnp.broadcast_to(jnp.arange(b)[None], (f, b)).reshape(-1)
+        return ring.at[rows, ring_idx.reshape(-1)].set(
+            logits.reshape(f * b, fc), mode="drop")
+
+    def _ring_chunk_step(self, state, x_chunk: jax.Array, active: jax.Array,
+                         ring: jax.Array, ring_idx: jax.Array,
+                         aux_acc: jax.Array):
+        state, logits, aux = self._chunk_step(state, x_chunk)
+        ring = self._ring_write_chunk(ring, ring_idx, logits)
+        return state, ring, aux_acc + jax.vmap(pack_step_aux)(
+            aux, active).sum(axis=0)
+
+    def _ring_chunk_step_quiet(self, state, x_chunk: jax.Array,
+                               ring: jax.Array, ring_idx: jax.Array):
+        state, logits, _ = self._chunk_step(state, x_chunk)
+        return state, self._ring_write_chunk(ring, ring_idx, logits)
+
+    def _ring_chunk_step_fused(self, state, x_raw: jax.Array,
+                               ctrl: jax.Array, ring: jax.Array,
+                               aux_acc: jax.Array):
+        """Chunked ``_ring_frame_step_fused``: ``ctrl`` is the packed
+        (2, F, slots) int32 control word — row 0 the per-sub-step fill
+        mask, row 1 the per-sub-step ring write index (``ring_frames``,
+        i.e. dropped, when idle)."""
+        return self._ring_chunk_step(state, self._quantize_in_graph(x_raw),
+                                     ctrl[0], ring, ctrl[1], aux_acc)
+
+    def _ring_chunk_step_fused_quiet(self, state, x_raw: jax.Array,
+                                     ctrl: jax.Array, ring: jax.Array):
+        return self._ring_chunk_step_quiet(
             state, self._quantize_in_graph(x_raw), ring, ctrl[1])
 
     # ------------------------------------------------------------ execution
@@ -648,25 +782,68 @@ class StreamLoop(SlotScheduler):
     accumulated on device.  Scheduling and logits are identical across
     contracts; only *when data crosses to the host* changes.
 
+    ``chunk_frames=C`` amortizes dispatch: each ``step_once`` advances
+    every active slot by up to C frames in ONE jitted device call (the
+    mega-step backends run the chunk as one kernel dispatch; per-op tables
+    scan it).  Per chunk, slot i serves ``min(C, remaining frames)``
+    frames and idles for the rest (the ragged tail of a stream whose
+    length is not a multiple of C) — no mid-chunk refill; completions,
+    refills, and the ring watermark are decided at the chunk boundary,
+    and idle sub-steps are masked out of the ring writes and the counters
+    while the completing slot's state is reset at the boundary — so
+    per-stream logits, final state, and counters are bit-identical to
+    ``chunk_frames=1``, which remains the bit-parity comparator the same
+    way ``pipeline_depth=0`` is.  The pipelined contract requires
+    ``ring_frames`` to be a multiple of C so a *live* slot never idles
+    mid-chunk on ring capacity (its state would silently advance through
+    frames it never received).
+
+    Every loop-carried device buffer (recurrent/delta state, logit ring,
+    counter accumulator) is *donated* to the step dispatch, so XLA updates
+    it in place, and ``aot_warmup=True`` (the default) pre-compiles the
+    loop's step executables at construction (``jax.jit(...).lower()
+    .compile()``) and dispatches through them — steady-state serving
+    performs zero compiles (tests/test_compile_count.py).
+
     ``host_syncs`` counts device->host transfers the loop performs — the
     quantity the pipelined contract minimizes (``bench_stream_pipeline``
-    reports it per frame).  ``track_sparsity=False`` detaches the
-    sparsity-counter sink entirely: no counter math, no counter fetches.
+    reports it per frame).  ``dispatches`` counts jitted device dispatches
+    and ``frames_served`` slot-frames advanced, so ``dispatches /
+    frames_served`` exposes the 1 -> 1/C amortization under full slots.
+    ``track_sparsity=False`` detaches the sparsity-counter sink entirely:
+    no counter math, no counter fetches.
     """
 
     def __init__(self, engine: CompiledRSNN, batch_slots: int = 4,
                  pipeline_depth: int = 2, ring_frames: int = 256,
-                 track_sparsity: bool = True):
+                 track_sparsity: bool = True, chunk_frames: int = 1,
+                 aot_warmup: bool = True):
         super().__init__(batch_slots)
         if pipeline_depth < 0:
             raise ValueError(f"pipeline_depth must be >= 0, "
                              f"got {pipeline_depth}")
         if ring_frames < 1:
             raise ValueError(f"ring_frames must be >= 1, got {ring_frames}")
+        if chunk_frames < 1:
+            raise ValueError(f"chunk_frames must be >= 1, got {chunk_frames}")
+        if (chunk_frames > 1 and pipeline_depth >= 1
+                and ring_frames % chunk_frames != 0):
+            # a live stream's ring fill advances in whole chunks, so with
+            # ring_frames % chunk_frames == 0 its capacity at a chunk
+            # boundary is never less than a full chunk and only *completed*
+            # (state-reset) slots ever idle mid-chunk.  A non-multiple ring
+            # would force a live slot to idle mid-chunk on ring-capacity,
+            # advancing its recurrent state through zero frames it never
+            # received — silently breaking chunk/per-frame bit parity.
+            raise ValueError(
+                f"ring_frames ({ring_frames}) must be a multiple of "
+                f"chunk_frames ({chunk_frames}) in the pipelined contract")
         self.engine = engine
         self.pipeline_depth = pipeline_depth
         self.ring_frames = ring_frames
         self.track_sparsity = track_sparsity
+        self.chunk_frames = chunk_frames
+        self.aot_warmup = aot_warmup
         # monotonic clock behind the request lifecycle stamps; swappable
         # (deterministic tests, the load generator's virtual-time checks)
         self.clock = time.monotonic
@@ -675,6 +852,9 @@ class StreamLoop(SlotScheduler):
         self._inflight: collections.deque[_InflightStep] = collections.deque()
         self._ring = self._init_ring() if pipeline_depth >= 1 else None
         self.reset_metrics()
+        self._bind_step_fns()
+        if aot_warmup:
+            self._warm_executables()
 
     def _init_ring(self):
         """Device-side per-slot logit ring (overridden to shard on a mesh)."""
@@ -685,6 +865,91 @@ class StreamLoop(SlotScheduler):
     def _zero_aux_acc(self):
         """Zeroed packed-counter accumulator (overridden to place on mesh)."""
         return jnp.zeros((2 * self.engine.cfg.num_ts + 4,), jnp.float32)
+
+    # -------------------------------------------------- executables / warmup
+
+    def _bind_step_fns(self) -> None:
+        """Bind the dispatch callables this loop's contract uses — the
+        donated jitted variants, replaced by AOT-compiled executables when
+        ``aot_warmup`` runs.  (Overridden by the sharded loop, which
+        dispatches its own device-resident-buffer jits.)"""
+        eng = self.engine
+        if self.chunk_frames == 1:
+            self._fn_step = eng._loop_step_masked
+            self._fn_ring = (eng._loop_step_ring if self.track_sparsity
+                             else eng._loop_step_ring_quiet)
+        else:
+            self._fn_step = eng._loop_step_masked_chunk
+            self._fn_ring = (eng._loop_step_ring_chunk if self.track_sparsity
+                             else eng._loop_step_ring_chunk_quiet)
+
+    def _warm_executables(self) -> None:
+        """AOT-compile the step executable this loop dispatches
+        (``jax.jit(...).lower().compile()`` via the engine's keyed cache —
+        loops sharing an engine share executables).  Slot count, chunk
+        size, and ring shape are fixed at construction, so after this a
+        steady-state serve never compiles — the class of bug PR 6 caught
+        as a mid-serve compile storm, now guarded by
+        tests/test_compile_count.py."""
+        eng = self.engine
+        sds = jax.ShapeDtypeStruct
+        st = jax.tree.map(lambda a: sds(a.shape, a.dtype), self.state)
+        b, c, d = self.slots, self.chunk_frames, eng.cfg.input_dim
+        if self.pipeline_depth == 0:
+            if c == 1:
+                self._fn_step = eng.aot_compile(
+                    ("v1", b), eng._loop_step_masked, st,
+                    sds((b, d), jnp.float32), sds((b,), jnp.bool_))
+            else:
+                self._fn_step = eng.aot_compile(
+                    ("v1-chunk", b, c), eng._loop_step_masked_chunk, st,
+                    sds((c, b, d), jnp.float32), sds((c, b), jnp.bool_))
+        else:
+            ring = sds(self._ring.shape, self._ring.dtype)
+            if c == 1:
+                x, ctrl = sds((b, d), jnp.float32), sds((2, b), jnp.int32)
+                if self.track_sparsity:
+                    self._fn_ring = eng.aot_compile(
+                        ("v2", b, self.ring_frames), eng._loop_step_ring,
+                        st, x, ctrl, ring,
+                        sds(self._aux_acc.shape, self._aux_acc.dtype))
+                else:
+                    self._fn_ring = eng.aot_compile(
+                        ("v2-quiet", b, self.ring_frames),
+                        eng._loop_step_ring_quiet, st, x, ctrl, ring)
+            else:
+                x = sds((c, b, d), jnp.float32)
+                ctrl = sds((2, c, b), jnp.int32)
+                if self.track_sparsity:
+                    self._fn_ring = eng.aot_compile(
+                        ("v2-chunk", b, c, self.ring_frames),
+                        eng._loop_step_ring_chunk, st, x, ctrl, ring,
+                        sds(self._aux_acc.shape, self._aux_acc.dtype))
+                else:
+                    self._fn_ring = eng.aot_compile(
+                        ("v2-chunk-quiet", b, c, self.ring_frames),
+                        eng._loop_step_ring_chunk_quiet, st, x, ctrl, ring)
+        self._warm_slot_ops()
+
+    def _warm_slot_ops(self) -> None:
+        """Touch the per-slot-index eager helpers once per slot: each
+        static slot index bakes its own tiny executable (``reset_slot``'s
+        scatter, the ring-row harvest slice, the retire fence slice), so
+        warming them here keeps mid-serve compiles at zero."""
+        for i in range(self.slots):
+            jax.block_until_ready(reset_slot(self.state, i))
+            if self._ring is not None:
+                jax.block_until_ready(self._ring[i])
+        if self._ring is not None:
+            jax.block_until_ready(self._ring_fence())
+
+    def _ring_fence(self):
+        """A tiny eager slice of the just-dispatched ring, used as the
+        retire-time fence handle.  The ring array itself can no longer be
+        the handle: the *next* dispatch donates (deletes) it, and blocking
+        on a deleted buffer raises — the slice owns its own buffer and
+        becomes ready exactly when the step's ring output does."""
+        return self._ring[0, 0, 0]
 
     # ------------------------------------------------------------- frontend
 
@@ -699,11 +964,11 @@ class StreamLoop(SlotScheduler):
             raise ValueError(
                 f"frames must have shape (T, input_dim={d}); "
                 f"got {frames.shape}")
-        if (self.pipeline_depth >= 1 and self.engine._input_scale is None
+        if (self.engine._input_scale is None
                 and frames.size and np.any(frames != np.round(frames))):
-            # the pipelined step fuses quantization into the jitted dispatch
-            # and cannot run the eager integer-contract check per step —
-            # enforce it here, once per utterance
+            # every loop contract now fuses quantization into the jitted
+            # dispatch (v1 included), so the eager integer-contract check
+            # cannot run per step — enforce it here, once per utterance
             raise ValueError(
                 "input_scale=None requires integer-valued features; "
                 "pass input_scale=calibrate_input_scale(features)")
@@ -753,25 +1018,27 @@ class StreamLoop(SlotScheduler):
         return x
 
     def _dispatch_step(self, active: np.ndarray):
-        """v1 path: advance the engine one frame over all slots.  Returns
-        (logits (slots, fc_dim) np, packed masked counter vector)."""
+        """v1 path: advance the engine one frame over all slots through the
+        donated (and, with ``aot_warmup``, pre-compiled) step — input
+        quantization fused into the dispatch, state updated in place.
+        Returns (logits (slots, fc_dim) np, packed masked counter
+        vector)."""
         x = self._gather_host_frames()
-        xq = self.engine.quantize_features(jnp.asarray(x))
-        self.state, logits, aux_vec = self.engine.step_masked(
-            self.state, xq, jnp.asarray(active))
+        self.state, logits, aux_vec = self._fn_step(self.state, x, active)
         return np.asarray(logits), aux_vec
 
     def _dispatch_ring_step(self, ctrl: np.ndarray) -> None:
         """v2 path: dispatch one pipelined step (no host transfer; input
         quantization is fused into the jitted step, all scalar operands
-        ride the packed ``ctrl`` word)."""
-        x = jnp.asarray(self._gather_host_frames())
+        ride the packed ``ctrl`` word).  The state, ring, and counter
+        accumulator are donated — XLA writes the ring row in place."""
+        x = self._gather_host_frames()
         if self.counters is None:
-            self.state, self._ring = self.engine.step_ring_quiet(
-                self.state, x, jnp.asarray(ctrl), self._ring)
+            self.state, self._ring = self._fn_ring(
+                self.state, x, ctrl, self._ring)
         else:
-            self.state, self._ring, self._aux_acc = self.engine.step_ring(
-                self.state, x, jnp.asarray(ctrl), self._ring, self._aux_acc)
+            self.state, self._ring, self._aux_acc = self._fn_ring(
+                self.state, x, ctrl, self._ring, self._aux_acc)
 
     def step_once(self) -> bool:
         """One engine step over all slots; returns False when fully drained
@@ -785,7 +1052,11 @@ class StreamLoop(SlotScheduler):
                 return True
             return False
         if self.pipeline_depth == 0:
-            return self._step_once_sync(active)
+            if self.chunk_frames == 1:
+                return self._step_once_sync(active)
+            return self._step_once_sync_chunk()
+        if self.chunk_frames > 1:
+            return self._step_once_chunk()
 
         ctrl = np.zeros((2, self.slots), np.int32)  # [active mask; ring idx]
         ctrl[0] = active
@@ -794,13 +1065,153 @@ class StreamLoop(SlotScheduler):
                    for i in range(self.slots)]
         self._dispatch_ring_step(ctrl)
         self.steps += 1
+        self.dispatches += 1
+        self.frames_served += int(active.sum())
         if self.counters is not None:
             self._frames_acc += float(active.sum())
         completed = self._advance_slots()
-        self._inflight.append(_InflightStep(self._ring, completed))
+        self._inflight.append(_InflightStep(self._ring_fence(), completed))
         while len(self._inflight) > max(self.pipeline_depth - 1, 0):
             self._retire()
         return True
+
+    # -------------------------------------------------- chunked step paths
+
+    def _chunk_counts(self) -> list[int]:
+        """Frames each slot serves in this chunk: bounded by the chunk
+        size and the stream's remaining frames (ragged tail).  A slot that
+        completes idles to the chunk boundary (no mid-chunk refill) with
+        its sub-steps masked from the ring and the counters; its state is
+        reset at the boundary, so the idle advance is invisible.  In the
+        pipelined contract a live slot never idles: ``ring_frames`` is a
+        multiple of ``chunk_frames`` (constructor invariant), so fill
+        advances in whole chunks, hits the watermark exactly at a chunk
+        boundary, and the flush restores full capacity — which is also why
+        a stream longer than ``ring_frames`` never deadlocks."""
+        counts = []
+        for i, r in enumerate(self.slot_req):
+            if r is None:
+                counts.append(0)
+                continue
+            n = min(self.chunk_frames, len(r.frames) - self.slot_pos[i])
+            if self.pipeline_depth >= 1:
+                cap = self.ring_frames - (self.slot_pos[i] - self._flushed[i])
+                assert cap >= n, "live slot would idle mid-chunk (ring " \
+                    "capacity below a chunk — the constructor invariant " \
+                    "should make this unreachable)"
+            counts.append(n)
+        return counts
+
+    def _stage_chunk(self, counts: list[int]) -> np.ndarray:
+        """Host-side chunk staging: the next ``counts[i]`` frames of each
+        slot into an (F, slots, input_dim) buffer; idle sub-steps stay
+        zero (the fill mask, not this zeroing, keys the counters)."""
+        x = np.zeros((self.chunk_frames, self.slots, self.engine.cfg.input_dim),
+                     np.float32)
+        for i, r in enumerate(self.slot_req):
+            if counts[i]:
+                p = self.slot_pos[i]
+                x[:counts[i], i] = r.frames[p:p + counts[i]]
+        return x
+
+    def _dispatch_step_chunk(self, counts: list[int], act: np.ndarray):
+        """v1 chunked dispatch: (F, slots) fill mask ``act`` -> (logits
+        (F, slots, fc_dim) np, packed masked counter vector)."""
+        x = self._stage_chunk(counts)
+        self.state, logits, aux_vec = self._fn_step(self.state, x, act)
+        return np.asarray(logits), aux_vec
+
+    def _step_once_sync_chunk(self) -> bool:
+        """v1 synchronous contract at ``chunk_frames > 1``: one dispatch
+        and one logit fetch per chunk, scheduling otherwise identical to
+        per-frame stepping."""
+        counts = self._chunk_counts()
+        act = np.zeros((self.chunk_frames, self.slots), bool)
+        for i, n in enumerate(counts):
+            act[:n, i] = True
+        logits_np, aux_vec = self._dispatch_step_chunk(counts, act)
+        self.host_syncs += 1  # per-chunk logit fetch
+        self.steps += 1
+        self.dispatches += 1
+        served = int(sum(counts))
+        self.frames_served += served
+        if self.counters is not None:
+            self.counters.update(
+                unpack_step_aux(aux_vec, self.engine.cfg.num_ts),
+                active_frames=float(served))
+            self.host_syncs += 1
+        for i, r in enumerate(self.slot_req):
+            if r is None or counts[i] == 0:
+                continue
+            r.logits.extend(logits_np[:counts[i], i])
+            self.slot_pos[i] += counts[i]
+            if self.slot_pos[i] == len(r.frames):
+                self._finish_slot(i)
+                self.state = reset_slot(self.state, i)
+        return True
+
+    def _dispatch_ring_chunk(self, counts: list[int],
+                             ctrl: np.ndarray) -> None:
+        """v2 chunked dispatch (no host transfer): ``ctrl`` is the packed
+        (2, F, slots) word of ``_ring_chunk_step_fused``."""
+        x = self._stage_chunk(counts)
+        if self.counters is None:
+            self.state, self._ring = self._fn_ring(
+                self.state, x, ctrl, self._ring)
+        else:
+            self.state, self._ring, self._aux_acc = self._fn_ring(
+                self.state, x, ctrl, self._ring, self._aux_acc)
+
+    def _step_once_chunk(self) -> bool:
+        """v2 pipelined contract at ``chunk_frames > 1``: one in-flight
+        pipeline entry per chunk."""
+        counts = self._chunk_counts()
+        c, b = self.chunk_frames, self.slots
+        ctrl = np.zeros((2, c, b), np.int32)
+        # default ring index is one past the end: idle sub-steps' writes
+        # are dropped (mode="drop" in _ring_write_chunk)
+        ctrl[1] = self.ring_frames
+        for i, n in enumerate(counts):
+            if n:
+                base = self.slot_pos[i] - self._flushed[i]
+                ctrl[0, :n, i] = 1
+                ctrl[1, :n, i] = base + np.arange(n)
+        self._dispatch_ring_chunk(counts, ctrl)
+        self.steps += 1
+        self.dispatches += 1
+        served = int(sum(counts))
+        self.frames_served += served
+        if self.counters is not None:
+            self._frames_acc += float(served)
+        completed = self._advance_slots_chunk(counts)
+        self._inflight.append(_InflightStep(self._ring_fence(), completed))
+        while len(self._inflight) > max(self.pipeline_depth - 1, 0):
+            self._retire()
+        return True
+
+    def _advance_slots_chunk(self, counts: list[int]) -> list[StreamRequest]:
+        """``_advance_slots`` generalized to a per-slot frame count (the
+        chunk's fill): cursors advance by ``counts[i]``; completion and
+        the ring watermark are decided at the chunk boundary.  ``counts``
+        is capped by remaining ring capacity, so fill never exceeds
+        ``ring_frames``."""
+        completed = []
+        for i, r in enumerate(self.slot_req):
+            if r is None or counts[i] == 0:
+                continue
+            self.slot_pos[i] += counts[i]
+            fill = self.slot_pos[i] - self._flushed[i]
+            if self.slot_pos[i] == len(r.frames):  # stream complete
+                if fill > 0:
+                    r.pending.append((self._ring[i], fill))
+                completed.append(r)
+                self._finish_slot(i)
+                self._flushed[i] = 0
+                self.state = reset_slot(self.state, i)
+            elif fill == self.ring_frames:  # watermark flush: ring is full
+                r.pending.append((self._ring[i], fill))
+                self._flushed[i] = self.slot_pos[i]
+        return completed
 
     def _advance_slots(self) -> list[StreamRequest]:
         """Dispatch-time bookkeeping: advance cursors, harvest completed or
@@ -843,6 +1254,8 @@ class StreamLoop(SlotScheduler):
         logits_np, aux_vec = self._dispatch_step(active)
         self.host_syncs += 1  # per-frame logit fetch
         self.steps += 1
+        self.dispatches += 1
+        self.frames_served += int(active.sum())
         if self.counters is not None:
             # the packed-vector fetch is gated on an attached sink
             self.counters.update(
@@ -898,6 +1311,8 @@ class StreamLoop(SlotScheduler):
         self._frames_acc = 0.0
         self.steps = 0
         self.host_syncs = 0
+        self.dispatches = 0  # jitted device dispatches (1/chunk, not 1/frame)
+        self.frames_served = 0  # slot-frames advanced across all dispatches
 
     def _drain_aux(self) -> None:
         """Fold the device-side counter accumulator into ``counters`` (one

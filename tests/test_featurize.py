@@ -126,3 +126,59 @@ def test_backpressure_bounds_queue():
     # queue(maxsize=2) + one blocked put + one returned item
     assert len(produced) <= 4
     feat.close()
+
+
+# ------------------------------------------------- chunked-loop queue sizing
+
+
+def test_prefetch_depth_accounts_for_chunk():
+    """A chunked loop can retire a whole chunk of frames per slot per
+    in-flight dispatch, so the queue covers slots * (depth + 1) * chunk;
+    chunk_frames=1 keeps the historical v2 sizing."""
+    from repro.data.featurize import prefetch_depth
+
+    assert prefetch_depth(4, 2) == 6  # default chunk=1: unchanged
+    assert prefetch_depth(4, 2, chunk_frames=1) == 6
+    assert prefetch_depth(2, 2, chunk_frames=4) == 24
+    assert prefetch_depth(1, 0, chunk_frames=2) == 2  # base floor still wins
+    assert prefetch_depth(4, 0, chunk_frames=8) == 32
+
+
+def test_for_loop_sizes_queue_for_chunked_loop():
+    """AsyncFeaturizer.for_loop reads the loop's chunk_frames, and the
+    queue never starves a chunked serve: a worst-case burst of one-chunk
+    utterances (every slot refills at every chunk boundary) completes with
+    logits identical to raw submission."""
+    import jax
+    from repro.core import rsnn
+    from repro.data import featurize
+    from repro.serving import stream as S
+    from repro.serving.sharded import ShardedStreamLoop
+
+    cfg = rsnn.RSNNConfig(input_dim=8, hidden_dim=16, fc_dim=12, num_ts=2)
+    params = rsnn.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(2)
+    # 12 short utterances (<= one chunk each): chunk-boundary refill storm
+    utts = [rng.normal(size=(t, 8)).astype(np.float32)
+            for t in (2, 1, 3, 2, 1, 2, 3, 1, 2, 3, 1, 2)]
+
+    def build():
+        eng = S.CompiledRSNN(cfg, params, S.EngineConfig(input_scale=0.05))
+        return ShardedStreamLoop(eng, batch_slots=2, max_frames=8,
+                                 pipeline_depth=2, ring_frames=6,
+                                 chunk_frames=3)
+
+    ref = build()
+    for u in utts:
+        ref.submit(u)
+    done_ref = ref.run()
+
+    loop = build()
+    feat = featurize.AsyncFeaturizer.for_loop(loop, utts)
+    assert feat._q.maxsize == featurize.prefetch_depth(2, 2, chunk_frames=3)
+    sids = loop.submit_stream(feat, quantized=True)
+    done = loop.run()
+    assert sids == [r.sid for r in done]
+    assert len(done) == len(utts)
+    for a, b in zip(done_ref, done):
+        np.testing.assert_array_equal(a.stacked_logits(), b.stacked_logits())

@@ -176,7 +176,8 @@ def _deterministic_run_workload(capacity: float):
         return loadgen.RunResult(
             streams=wl.num_streams, frames=wl.num_streams * 4, wall_s=1.0,
             step_us=[10.0], completion_ms=[float(backlog)],
-            queue_wait_ms=[0.0], max_backlog=backlog, steps=4, host_syncs=1)
+            queue_wait_ms=[0.0], max_backlog=backlog, steps=4, host_syncs=1,
+            dispatches=4, frames_served=wl.num_streams * 4)
 
     return fake
 
@@ -233,11 +234,12 @@ def _stats(p50=100.0, p99=200.0):
             "mean": p50, "max": p99}
 
 
-def _cell(key="slots2-depth0-csc-jnp-mesh1", p50=100.0, p99=200.0, sat=50.0,
-          tput=1000.0, backend="jnp"):
+def _cell(key="slots2-depth0-csc-jnp-chunk1-mesh1", p50=100.0, p99=200.0,
+          sat=50.0, tput=1000.0, backend="jnp", chunk=1):
     return {"key": key, "slots": 2, "pipeline_depth": 0, "layout": "csc",
-            "backend": backend,
+            "backend": backend, "chunk_frames": chunk,
             "mesh": 1, "streams": 8, "frames": 100,
+            "dispatches_per_frame": round(1.0 / chunk, 4),
             "frame_latency_us": _stats(p50, p99),
             "stream_completion_ms": _stats(), "queue_wait_ms": _stats(),
             "throughput_frames_per_s": tput,
@@ -328,10 +330,11 @@ def test_compare_docs_cross_machine_not_comparable():
 
 
 def test_compare_docs_unmatched_cells():
-    # cells match on the identity tuple (slots/depth/layout/backend/mesh),
-    # so a different backend is a different cell even at equal slots/layout
+    # cells match on the identity tuple (slots/depth/layout/backend/chunk/
+    # mesh), so a different backend is a different cell even at equal
+    # slots/layout
     base = _doc()
-    new = _doc(key="slots2-depth0-csc-fused-mesh1", backend="fused")
+    new = _doc(key="slots2-depth0-csc-fused-chunk1-mesh1", backend="fused")
     result = trajectory.compare_docs(new, base, threshold=0.5)
     assert result["matched_cells"] == 0
     assert any("no baseline" in ln for ln in result["lines"])
@@ -357,6 +360,41 @@ def test_schema_v1_doc_still_validates_and_compares():
     bad = _doc()
     del bad["cells"][0]["backend"]
     assert any("backend" in e for e in trajectory.validate_doc(bad))
+
+
+def test_schema_v2_doc_still_validates_and_compares():
+    """A committed v2 baseline (BENCH_7/8: backend axis, no chunk_frames
+    or dispatches_per_frame anywhere) stays readable, and its cells match
+    a v3 run's chunk_frames=1 cells — chunking defaults to per-frame."""
+    v2 = _doc()
+    v2["schema_version"] = 2
+    del v2["cells"][0]["chunk_frames"]
+    del v2["cells"][0]["dispatches_per_frame"]
+    assert trajectory.validate_doc(v2) == []
+
+    v3 = _doc(p50=120.0)  # +20%: matched, under the 50% threshold
+    result = trajectory.compare_docs(v3, v2, threshold=0.5)
+    assert result["matched_cells"] == 1
+    assert result["regressions"] == []
+
+    # a v3 cell missing the new fields is a schema error
+    for field in ("chunk_frames", "dispatches_per_frame"):
+        bad = _doc()
+        del bad["cells"][0][field]
+        assert any(field in e for e in trajectory.validate_doc(bad)), field
+
+
+def test_chunk_frames_is_cell_identity():
+    """chunk_frames keys the compare: a chunk=4 cell never matches the
+    chunk=1 cell it forked from, even at identical slots/depth/layout/
+    backend/mesh — its per-dispatch latency samples cover 4x the frames
+    and must not be diffed against per-frame samples."""
+    base = _doc()
+    new = _doc(key="slots2-depth0-csc-jnp-chunk4-mesh1", chunk=4)
+    assert new["cells"][0]["dispatches_per_frame"] == 0.25
+    result = trajectory.compare_docs(new, base, threshold=0.5)
+    assert result["matched_cells"] == 0
+    assert any("no baseline" in ln for ln in result["lines"])
 
 
 def test_delta_backend_cell_identity_roundtrips(tmp_path):

@@ -1,0 +1,193 @@
+"""Frame-chunked dispatch bit parity: ``chunk_frames=C`` must serve
+per-stream logits, final state, and sparsity counters bit-identical to
+``chunk_frames=1`` — the same comparator role ``pipeline_depth=0`` plays
+for the pipelined contract — across backends (jnp oracle, fused mega-step,
+delta), precisions/layouts (float, int4 dense / CSC / N:M-group), loop
+contracts (sync, pipelined, sharded, scan, from_artifact), and stream
+lengths that are NOT multiples of C (ragged tails, mid-chunk completions,
+ring-watermark flushes).  Fast tier."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import artifact, rsnn, sparse
+from repro.core.compression import (CompressionConfig, PruneSpec,
+                                    init_compression)
+from repro.serving import stream as S
+from repro.serving.sharded import ShardedStreamLoop
+
+# lengths chosen so chunks of 2 and 3 hit ragged tails, a 1-frame stream
+# (completes in the first sub-step of its first chunk), and a stream
+# longer than the small test ring (watermark flush mid-stream)
+LENS = (5, 1, 9, 3, 7, 4, 11, 2)
+
+
+def _utts(cfg, lens=LENS, seed=11):
+    rng = np.random.default_rng(seed)
+    return [np.round(rng.normal(0, 20, (t, cfg.input_dim))
+                     ).astype(np.float32) for t in lens]
+
+
+def _engine(cfg, params, kind: str) -> S.CompiledRSNN:
+    if kind == "float-jnp":
+        return S.CompiledRSNN(cfg, params, S.EngineConfig(backend="jnp"))
+    if kind == "int4-dense-jnp":
+        ccfg = CompressionConfig(weight_bits=4)
+        return S.CompiledRSNN(
+            cfg, params, S.EngineConfig(backend="jnp", precision="int4"),
+            ccfg=ccfg, cstate=init_compression(params, ccfg))
+    nm = PruneSpec(kind="nm", n=2, m=4,
+                   layout="csc" if "csc" in kind else "auto")
+    ccfg = CompressionConfig(weight_bits=4, prune_specs=(("fc_w", nm),))
+    backend = "delta" if kind.endswith("delta") else "fused"
+    return S.CompiledRSNN(
+        cfg, params,
+        S.EngineConfig(backend=backend, precision="int4", sparse_fc=True),
+        ccfg=ccfg, cstate=init_compression(params, ccfg))
+
+
+def _serve(engine, utts, *, depth, chunk, ring=6, slots=3, **kw):
+    loop = S.StreamLoop(engine, batch_slots=slots, pipeline_depth=depth,
+                        ring_frames=ring, chunk_frames=chunk, **kw)
+    sids = [loop.submit(u) for u in utts]
+    reqs = {r.sid: r for r in loop.run()}
+    return [reqs[s].stacked_logits() for s in sids], loop
+
+
+ENGINE_KINDS = ("float-jnp", "int4-dense-jnp", "int4-csc-fused",
+                "int4-nm-fused", "int4-nm-delta")
+
+
+@pytest.mark.parametrize("kind", ENGINE_KINDS)
+def test_chunked_parity_backends_and_layouts(small_cfg, rng_key, kind):
+    """C-frame chunks == per-frame stepping, bitwise, on every backend ×
+    precision/layout, sync and pipelined, including ragged tails and
+    watermark flushes (stream of 11 > ring of 6)."""
+    params = rsnn.init_params(rng_key, small_cfg)
+    eng = _engine(small_cfg, params, kind)
+    utts = _utts(small_cfg)
+    base, loop0 = _serve(eng, utts, depth=0, chunk=1)
+    prof0 = loop0.sparsity_profile()
+    for depth, chunk in [(0, 2), (0, 3), (2, 2), (2, 3), (2, 6)]:
+        got, loop = _serve(eng, utts, depth=depth, chunk=chunk)
+        for a, b in zip(base, got):
+            np.testing.assert_array_equal(a, b)
+        assert loop.sparsity_profile() == prof0, (depth, chunk)
+        assert loop.frames_served == sum(LENS)
+        assert loop.dispatches < loop0.dispatches  # amortization is real
+
+
+def test_chunked_state_parity_mid_stream(small_cfg, rng_key):
+    """The carried recurrent state is bit-identical at every chunk
+    boundary, not just at stream end (single slot, one long stream)."""
+    params = rsnn.init_params(rng_key, small_cfg)
+    eng = _engine(small_cfg, params, "float-jnp")
+    u = _utts(small_cfg, lens=(12,))[0]
+    chunked = S.StreamLoop(eng, batch_slots=1, pipeline_depth=2,
+                           ring_frames=4, chunk_frames=4)
+    frame = S.StreamLoop(eng, batch_slots=1, pipeline_depth=0)
+    chunked.submit(u[:8])  # stays live: completion would reset the state
+    frame.submit(u[:8])
+    for _ in range(2):  # 2 chunks of 4
+        chunked.step_once()
+    for _ in range(8):
+        frame.step_once()
+    chunked.flush()
+    for a, b in zip(jax.tree.leaves(jax.tree.map(np.asarray, chunked.state)),
+                    jax.tree.leaves(jax.tree.map(np.asarray, frame.state))):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_chunked_sharded_parity(small_cfg, rng_key):
+    """ShardedStreamLoop with chunk_frames=C == the per-frame single-device
+    loop (1-device mesh; the 8-virtual-device cross-check lives in
+    tests/test_sharded_stream.py's subprocess tier)."""
+    params = rsnn.init_params(rng_key, small_cfg)
+    eng = _engine(small_cfg, params, "float-jnp")
+    utts = _utts(small_cfg)
+    base, loop0 = _serve(eng, utts, depth=0, chunk=1)
+    prof0 = loop0.sparsity_profile()
+    for depth, chunk in [(0, 3), (2, 3)]:
+        loop = ShardedStreamLoop(eng, batch_slots=3, max_frames=16,
+                                 pipeline_depth=depth, ring_frames=6,
+                                 chunk_frames=chunk)
+        sids = [loop.submit(u) for u in utts]
+        reqs = {r.sid: r for r in loop.run()}
+        for a, b in zip(base, [reqs[s].stacked_logits() for s in sids]):
+            np.testing.assert_array_equal(a, b)
+        assert loop.sparsity_profile() == prof0
+
+
+def test_chunked_matches_scan_run(small_cfg, rng_key):
+    """A chunked serve of one stream == CompiledRSNN.run's lax.scan over
+    the same frames (the batch oracle), bitwise."""
+    params = rsnn.init_params(rng_key, small_cfg)
+    eng = _engine(small_cfg, params, "int4-csc-fused")
+    u = _utts(small_cfg, lens=(10,))[0]
+    logits_scan, _, _ = eng.run(jnp.asarray(u[None]))
+    got, _ = _serve(eng, [u], depth=2, chunk=4, ring=8, slots=1)
+    np.testing.assert_array_equal(np.asarray(logits_scan)[0], got[0])
+
+
+def test_chunked_from_artifact(small_cfg, rng_key, tmp_path):
+    """An artifact-served engine inherits chunked parity unchanged."""
+    params = rsnn.init_params(rng_key, small_cfg)
+    ccfg = CompressionConfig(fc_prune_frac=0.4, weight_bits=4)
+    cstate = init_compression(params, ccfg)
+    packed = sparse.pack_model(params, small_cfg, ccfg, cstate)
+    path = artifact.save_artifact(tmp_path / "art", cfg=small_cfg,
+                                  packed=packed, ccfg=ccfg,
+                                  input_scale=0.05, backend="jnp")
+    eng = S.CompiledRSNN.from_artifact(path)
+    utts = _utts(small_cfg)
+    base, _ = _serve(eng, utts, depth=0, chunk=1)
+    got, _ = _serve(eng, utts, depth=2, chunk=3)
+    for a, b in zip(base, got):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_dispatch_amortization_counts(small_cfg, rng_key):
+    """dispatches/frames bookkeeping: a single full-length stream takes
+    exactly ceil(T / C) dispatches — 1/C dispatches per frame."""
+    params = rsnn.init_params(rng_key, small_cfg)
+    eng = _engine(small_cfg, params, "float-jnp")
+    u = _utts(small_cfg, lens=(12,))[0]
+    for chunk, expect in [(1, 12), (3, 4), (4, 3)]:
+        _, loop = _serve(eng, [u], depth=2, chunk=chunk, ring=12, slots=1)
+        assert loop.frames_served == 12
+        assert loop.dispatches == expect
+
+
+def test_chunk_validation(small_cfg, rng_key):
+    params = rsnn.init_params(rng_key, small_cfg)
+    eng = _engine(small_cfg, params, "float-jnp")
+    with pytest.raises(ValueError, match="chunk_frames must be >= 1"):
+        S.StreamLoop(eng, chunk_frames=0)
+    with pytest.raises(ValueError, match="multiple of"):
+        # a live stream would idle mid-chunk on ring capacity and advance
+        # its state through frames it never received — rejected up front
+        S.StreamLoop(eng, pipeline_depth=2, ring_frames=6, chunk_frames=4)
+    # unpipelined loops have no ring, so any chunk size is valid
+    S.StreamLoop(eng, pipeline_depth=0, ring_frames=6, chunk_frames=4)
+
+
+def test_donated_ring_is_consumed(small_cfg, rng_key):
+    """Buffer donation is real: the previous step's ring buffer is deleted
+    by the next dispatch (XLA aliased it), so reading a stale reference
+    raises instead of silently copying."""
+    params = rsnn.init_params(rng_key, small_cfg)
+    eng = _engine(small_cfg, params, "float-jnp")
+    loop = S.StreamLoop(eng, batch_slots=2, pipeline_depth=2,
+                        ring_frames=8, chunk_frames=2)
+    for u in _utts(small_cfg, lens=(9, 7, 8)):
+        loop.submit(u)
+    assert loop.step_once()
+    stale_ring, stale_state = loop._ring, loop.state
+    assert loop.step_once()
+    with pytest.raises(RuntimeError):
+        np.asarray(stale_ring)
+    with pytest.raises(RuntimeError):
+        jax.tree.map(np.asarray, stale_state)
+    loop.run()  # the loop itself only ever touches the live buffers
