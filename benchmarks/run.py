@@ -37,7 +37,8 @@ TIMED = (("bench_rsnn_forward", "bench_rsnn_forward"),
          ("bench_stream_pipeline", "bench_stream_pipeline"),
          ("bench_artifact_roundtrip", "bench_artifact_roundtrip"),
          ("bench_megastep", "bench_megastep"),
-         ("bench_delta", "bench_delta"))
+         ("bench_delta", "bench_delta"),
+         ("bench_spike_broadcast", "bench_spike_broadcast"))
 
 
 def _emit(name: str, us: float, derived) -> None:

@@ -1,7 +1,8 @@
 """Stream speech through the compressed RSNN in real time.
 
   PYTHONPATH=src python examples/stream_asr.py [--precision int4] \
-      [--backend jnp|ref|pallas|sparse|fused] [--layout dense|csc|nm] \
+      [--backend jnp|ref|pallas|sparse|fused|delta|spike|fused_spike] \
+      [--layout dense|csc|nm] \
       [--slots 4] [--streams 8] [--sharded] [--pipeline-depth 2] \
       [--artifact DIR | --save-artifact DIR] [--frames N]
 

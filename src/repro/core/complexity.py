@@ -159,6 +159,42 @@ def mmac_per_second(cfg: RSNNConfig, num_ts: int, **kw) -> float:
     return accumulates_per_frame(cfg, num_ts, **kw) * FRAMES_PER_SECOND / 1e6
 
 
+def spike_broadcast_report(cfg: RSNNConfig, num_ts: int,
+                           sparsity: SparsityProfile | None = None,
+                           merged_spike: bool = True,
+                           fc_prune_frac: float = 0.0) -> dict:
+    """Gathered-vs-dense accumulates of the spike-consuming matmuls.
+
+    The event-driven spike-broadcast path (``kernels/spike_broadcast``,
+    serving backend ``spike``) accumulates only the W rows named by actual
+    spike events, so its per-frame work is the density-scaled slice of
+    ``accumulates_per_frame`` that consumes spikes: the L0/L1-recurrent
+    and L1-feedforward matmuls plus the (merged-spike) FC readout — the
+    analog input layer is not spike-consuming and is excluded.  The dense
+    figures are the same terms at density 1.0, i.e. what the dense
+    kernels execute on identical spikes.  ``sparsity=None`` uses the
+    paper's Fig. 18 analytic defaults (0.38 per-ts / 0.46 union).
+    """
+    s = sparsity or SparsityProfile()
+    h = cfg.hidden_dim
+    rec = sum(h * h * (2.0 * s.l0_density[ts] + s.l1_density[ts])
+              for ts in range(num_ts))
+    rec_dense = 3.0 * h * h * num_ts
+    fc_w = h * cfg.fc_dim * (1.0 - fc_prune_frac)
+    if merged_spike and num_ts == 2:
+        fc, fc_dense = fc_w * s.fc_union_density, fc_w
+    else:
+        fc = sum(fc_w * s.fc_density[ts] for ts in range(num_ts))
+        fc_dense = fc_w * num_ts
+    gathered, dense = rec + fc, rec_dense + fc_dense
+    return {
+        "recurrent_gathered": rec, "recurrent_dense": rec_dense,
+        "fc_gathered": fc, "fc_dense": fc_dense,
+        "gathered": gathered, "dense": dense,
+        "skip_fraction": 1.0 - gathered / dense,
+    }
+
+
 def weight_accesses_per_frame(cfg: RSNNConfig, num_ts: int,
                               parallel_time_steps: bool) -> int:
     """Weight-buffer reads per frame (paper SII-C dataflow comparison)."""

@@ -40,6 +40,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.spike_broadcast import gather_matmul
+
 # operand count per FC mode (after the 11 common + weight refs)
 _FC_OPERANDS = {"dense_float": 1, "dense_int4": 2, "csc": 3, "nm": 2}
 
@@ -72,7 +74,8 @@ def _lif_chain(stim, u, h, beta, vth, num_ts: int):
     return jnp.stack(spikes), u
 
 
-def _fc_readout(merged, fc_refs, *, fc_mode: str, nm_n: int, nm_m: int):
+def _fc_readout(merged, fc_refs, *, fc_mode: str, nm_n: int, nm_m: int,
+                spike: bool = False):
     """Layout-resolved zero-skip FC over the merged spikes (B, H).
 
     Each branch replicates its layout's jnp oracle op-for-op:
@@ -81,14 +84,22 @@ def _fc_readout(merged, fc_refs, *, fc_mode: str, nm_n: int, nm_m: int):
     ``nm`` = ``layouts.nm.nm_matmul`` (gather, multiply, sum over the
     entry axis, then scale — the order that makes CSC and N:M agree
     bitwise on the same mask).
+
+    ``spike=True`` runs the two *dense* modes over compacted spike-event
+    lists (``spike_broadcast.gather_matmul``, bit-identical); the CSC and
+    N:M modes already skip on the weight side and keep their own gather.
     """
     b = merged.shape[0]
     if fc_mode == "dense_float":
-        return jnp.dot(merged, fc_refs[0][...],
-                       preferred_element_type=jnp.float32)
+        w = fc_refs[0][...]
+        if spike:
+            return gather_matmul(merged, w, merged.shape[1])
+        return jnp.dot(merged, w, preferred_element_type=jnp.float32)
     if fc_mode == "dense_int4":
-        return jnp.dot(merged, _dequant(fc_refs[0], fc_refs[1]),
-                       preferred_element_type=jnp.float32)
+        w = _dequant(fc_refs[0], fc_refs[1])
+        if spike:
+            return gather_matmul(merged, w, merged.shape[1])
+        return jnp.dot(merged, w, preferred_element_type=jnp.float32)
     if fc_mode == "csc":
         idx = fc_refs[0][...]  # (nnz_max, FC) int32 surviving rows
         val = fc_refs[1][...]  # (nnz_max, FC) f32 int4 values
@@ -113,7 +124,15 @@ def _fc_readout(merged, fc_refs, *, fc_mode: str, nm_n: int, nm_m: int):
 
 
 def _megastep_kernel(*refs, num_ts: int, frames: int, precision: str,
-                     fc_mode: str, nm_n: int, nm_m: int, input_bits: int):
+                     fc_mode: str, nm_n: int, nm_m: int, input_bits: int,
+                     spike: bool):
+    def _spikes_dot(s2, w):
+        # spike-consuming matmul: dense MXU dot, or — in spike mode — the
+        # event-gather accumulate (bit-identical; lossless capacity)
+        if spike:
+            return gather_matmul(s2, w, s2.shape[1])
+        return jnp.dot(s2, w, preferred_element_type=jnp.float32)
+
     (x_ref, s0_ref, u0_ref, h0_ref, s1_ref, u1_ref, h1_ref,
      beta0_ref, vth0_ref, beta1_ref, vth1_ref) = refs[:11]
     nw = 8 if precision == "int4" else 4
@@ -150,18 +169,15 @@ def _megastep_kernel(*refs, num_ts: int, frames: int, precision: str,
         # L0: feedforward stimulus once per frame, shared across time
         # steps; recurrent matmul with TS folded into M (one W fetch)
         ff0 = jnp.dot(x, w0x, preferred_element_type=jnp.float32)
-        rec0 = jnp.dot(s0.reshape(num_ts * b, h), w0h,
-                       preferred_element_type=jnp.float32)
+        rec0 = _spikes_dot(s0.reshape(num_ts * b, h), w0h)
         stim0 = jnp.broadcast_to(ff0[None], (num_ts, b, h)) \
             + rec0.reshape(num_ts, b, h)
         s0, u0 = _lif_chain(stim0, u0, h0, beta0, vth0, num_ts)
         h0 = s0[-1]
 
         # L1: per-ts feedforward from L0 spikes (straight from VMEM)
-        ff1 = jnp.dot(s0.reshape(num_ts * b, h), w1x,
-                      preferred_element_type=jnp.float32)
-        rec1 = jnp.dot(s1.reshape(num_ts * b, h), w1h,
-                       preferred_element_type=jnp.float32)
+        ff1 = _spikes_dot(s0.reshape(num_ts * b, h), w1x)
+        rec1 = _spikes_dot(s1.reshape(num_ts * b, h), w1h)
         stim1 = ff1.reshape(num_ts, b, h) + rec1.reshape(num_ts, b, h)
         s1, u1 = _lif_chain(stim1, u1, h1, beta1, vth1, num_ts)
         h1 = s1[-1]
@@ -169,7 +185,7 @@ def _megastep_kernel(*refs, num_ts: int, frames: int, precision: str,
         # merged-spike zero-skip readout (paper §II-D2)
         merged = s1.sum(axis=0)  # (B, H) in {0..TS}
         logits_out[f, :, :] = _fc_readout(merged, fc_refs, fc_mode=fc_mode,
-                                          nm_n=nm_n, nm_m=nm_m)
+                                          nm_n=nm_n, nm_m=nm_m, spike=spike)
 
         # per-slot sparsity counters: aux outputs of the same dispatch
         # (bit-exact with serving.stream._frame_counters)
@@ -189,11 +205,11 @@ def _megastep_kernel(*refs, num_ts: int, frames: int, precision: str,
 
 @functools.partial(jax.jit, static_argnames=("precision", "fc_mode",
                                              "input_bits", "nm_n", "nm_m",
-                                             "interpret"))
+                                             "spike", "interpret"))
 def megastep(x, s0, u0, h0, s1, u1, h1, beta0, vth0, beta1, vth1,
              wargs: tuple, fcargs: tuple, *, precision: str, fc_mode: str,
              input_bits: int, nm_n: int = 0, nm_m: int = 0,
-             interpret: bool = False):
+             spike: bool = False, interpret: bool = False):
     """Single-dispatch mega-step over an F-frame chunk.
 
     Shapes: ``x`` (F, B, input_dim) quantized frames; ``s0``/``s1``
@@ -204,6 +220,10 @@ def megastep(x, s0, u0, h0, s1, u1, h1, beta0, vth0, beta1, vth1,
     float precision, packed ``(q, scale)`` pairs per weight at int4.
     ``fcargs`` holds the FC operands that the packed tensor's layout
     binding (``WeightLayout.megastep_fc``) resolved for ``fc_mode``.
+    ``spike=True`` — the ``fused_spike`` backend's binding — runs every
+    spike-consuming matmul (L0-recurrent, L1-feedforward, L1-recurrent,
+    and the dense FC modes) over compacted spike-event lists
+    (``kernels/spike_broadcast``), bit-identical to the dense dots.
 
     Returns ``(s0, u0, s1, u1, logits (F, B, fc_dim), spikes_l0 (F, TS, B),
     spikes_l1 (F, TS, B), union_l1 (F, B), input_one_bits (F, B))``.
@@ -225,6 +245,7 @@ def megastep(x, s0, u0, h0, s1, u1, h1, beta0, vth0, beta1, vth1,
     ]
     kernel = functools.partial(
         _megastep_kernel, num_ts=ts, frames=frames, precision=precision,
-        fc_mode=fc_mode, nm_n=nm_n, nm_m=nm_m, input_bits=input_bits)
+        fc_mode=fc_mode, nm_n=nm_n, nm_m=nm_m, input_bits=input_bits,
+        spike=spike)
     return pl.pallas_call(kernel, out_shape=out_shape, interpret=interpret)(
         x, s0, u0, h0, s1, u1, h1, *lif2, *wargs, *fcargs)

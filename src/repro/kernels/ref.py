@@ -55,6 +55,30 @@ def delta_step_ref(x: jax.Array, x_prev: jax.Array, pre_prev: jax.Array,
     return x_hat, pre, mask.astype(jnp.float32)
 
 
+def spike_broadcast_ref(x: jax.Array, w: jax.Array,
+                        capacity: int | None = None) -> jax.Array:
+    """Event-driven spike-broadcast matmul oracle (input zero-skip).
+
+    Defines the semantics ``kernels/spike_broadcast.py`` must match as a
+    *dense* matmul over the kept events: each row keeps its first
+    ``capacity`` nonzero entries in ascending index order and zeroes the
+    rest (the finite-event-queue truncation contract); ``capacity=None``
+    keeps everything, making this literally the dense ``x @ w`` — which
+    the kernel's gather-accumulate matches bit for bit.
+
+    x: (R, K) rows or (TS, B, K) spike trains (merged over TS first, the
+    §II-D2 union path); w: (K, N).  Returns (R|B, N) float32.
+    """
+    if x.ndim == 3:
+        x = x.sum(axis=0)
+    x = x.astype(jnp.float32)
+    if capacity is not None:
+        cnt = jnp.cumsum((x != 0).astype(jnp.int32), axis=1)
+        x = jnp.where(cnt <= capacity, x, 0.0)  # drop highest-index events
+    return jnp.dot(x, w.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+
+
 def unpack_int4_ref(packed: jax.Array) -> jax.Array:
     """(K//2, N) int8 -> (K, N) int8 in [-8, 7] (low nibble = even row)."""
     lo = (packed & 0xF).astype(jnp.int8)

@@ -41,7 +41,23 @@ Built-in backends:
       stimulus only where ``|x_t - x_prev| > ctx.delta_threshold``;
       measured delta sparsity feeds ``core/complexity.py``.  At
       ``threshold=0`` bit-identical to ``jnp`` at every loop contract
-      (tests/test_delta_backend.py).
+      (tests/test_delta_backend.py).  The recurrent operand is gated too:
+      the cell runs through ``kernels/spike_broadcast.spike_cell`` — for a
+      binary spike train the event list *is* the delta list (a spiking
+      neuron's recurrent contribution changes exactly when it spikes), so
+      the same compaction primitive covers EdgeDRNN's second operand.
+  ``spike``                — event-driven spike-broadcast path (the
+      paper's input-broadcasting scheme as executed compute): every
+      spike-consuming matmul — L0-recurrent via
+      ``kernels/spike_broadcast.spike_cell``, L1-feedforward via the
+      event-gather matmul, and the dense-FC readouts via its
+      merged-spike-union variant — compacts the binary spike matrix into
+      ascending-index event lists and accumulates only the gathered rows
+      of W.  Bit-identical to ``jnp`` at lossless capacity (the default);
+      ``ctx.spike_capacity`` models a finite hardware event queue.
+  ``fused_spike``          — the ``fused`` mega-step with its spike mode
+      on: the same single dispatch, with the three spike matmuls and the
+      dense FC modes running over compacted event lists.
 
 New kernels plug in via ``register`` without touching the engine: the
 engine resolves a table once at construction and calls through it.
@@ -80,6 +96,7 @@ class BackendContext:
     quant: dict  # name -> layouts.dense.QuantTensor
     sparse: dict  # name -> layout tensor (SparseColumns / NMGroupPacked)
     delta_threshold: float = 0.0  # delta backend's |x_t - x_prev| gate
+    spike_capacity: int | None = None  # event-list slots (None = lossless)
 
 
 class OpTable(NamedTuple):
@@ -221,15 +238,29 @@ def _build_delta(ctx: BackendContext) -> OpTable:
     propagates every numeric change, so logits/state/counters are
     bit-identical to ``jnp``; ``threshold>0`` trades stimulus drift for
     measured temporal sparsity (the ``delta_*`` counters -> MMAC/s).
+
+    EdgeDRNN gates *both* operands; the recurrent one is covered by
+    running the cell through the spike-event compaction
+    (``kernels/spike_broadcast.spike_cell``): a binary spike train's delta
+    list between consecutive time steps IS its event list — a recurrent
+    column contributes exactly when its neuron spikes — so skipping
+    zero-spike rows is the spike-domain form of delta-gating the state
+    operand.  Bit-identical, so the ``threshold=0`` contract is untouched.
     """
     table = _build_ref(ctx)
     w0x = ctx.dense["l0_wx"]
     thr = jnp.float32(ctx.delta_threshold)
+    cap = ctx.spike_capacity
 
     def delta_gate(x_t: jax.Array, x_prev: jax.Array, pre_prev: jax.Array):
         return ops.delta_step(x_t, x_prev, pre_prev, w0x, thr)
 
-    return table._replace(name="delta", delta_gate=delta_gate)
+    def cell(stim, s_prev, w, u0, h0, beta, vth):
+        return ops.spike_cell(stim, s_prev, w, u0, h0, beta, vth,
+                              capacity=cap)
+
+    return table._replace(name="delta", rsnn_cell=cell,
+                          delta_gate=delta_gate)
 
 
 @register("pallas")
@@ -254,6 +285,69 @@ def _build_sparse(ctx: BackendContext) -> OpTable:
     return _build_pallas(ctx)._replace(name="sparse")
 
 
+@register("spike", dense_stimulus=True)
+def _build_spike(ctx: BackendContext) -> OpTable:
+    """Event-driven spike-broadcast path: input-side zero skipping.
+
+    Every spike-consuming matmul runs over compacted ascending-index event
+    lists (``kernels/spike_broadcast``): the two recurrent cells through
+    ``spike_cell``, the L1 feedforward through the event-gather matmul,
+    and the dense readouts through its merged-spike-union variant — only
+    the rows of W named by actual spikes are fetched and accumulated (the
+    paper's input-broadcasting scheme; EdgeDRNN's activation-side skip).
+    The analog L0 stimulus is not spike-consuming and stays a dense
+    matmul over the (dequantized-at-int4, bit-exact) weights, and a
+    layout-packed FC keeps its own weight-side zero-skip kernel.  At the
+    default lossless ``ctx.spike_capacity`` the gather accumulates in the
+    same partial-sum order as the dense dots, so logits/state/counters are
+    bit-identical to ``jnp`` at every loop contract
+    (tests/test_backend_conformance.py); a finite capacity truncates each
+    row's highest-index events (a hardware event-queue model).
+    """
+    cfg = ctx.cfg
+    cap = ctx.spike_capacity
+    dense = ctx.dense
+
+    def cell(stim, s_prev, w, u0, h0, beta, vth):
+        return ops.spike_cell(stim, s_prev, w, u0, h0, beta, vth,
+                              capacity=cap)
+
+    def ff(x2d: jax.Array, name: str) -> jax.Array:
+        if name == "l1_wx":  # spike-consuming: gather over spike events
+            return ops.spike_broadcast(x2d, dense[name], capacity=cap)
+        return x2d @ dense[name]  # analog input stimulus: dense
+
+    if ctx.sparse_fc:
+        t = ctx.sparse["fc_w"]
+        layout = layouts.layout_of(t)
+        fc_fn = layout.fc_kernel  # weight-side zero-skip, already fused
+        fc = lambda s1: fc_fn(s1, t)  # noqa: E731
+    else:
+        if ctx.precision == "int4":
+            qt = ctx.quant["fc_w"]
+            # bit-exact dequant (ref.int4_matmul_ref's weight), built once
+            w_fc = (ref.unpack_int4_ref(qt.packed).astype(jnp.float32)
+                    * qt.scale.reshape(-1).astype(jnp.float32))
+        else:
+            w_fc = ctx.dense["fc_w"]
+        if cfg.merged_spike:
+            # 3-D input -> the kernel's merged-spike-union path (§II-D2)
+            fc = lambda s1: ops.spike_broadcast(s1, w_fc,  # noqa: E731
+                                                capacity=cap)
+        elif ctx.precision == "int4":
+            # mirror _fc_op's per-ts sum composition bit for bit
+            fc = lambda s1: sum(  # noqa: E731
+                ops.spike_broadcast(s1[t], w_fc, capacity=cap)
+                for t in range(cfg.num_ts))
+        else:
+            fc = lambda s1: jnp.stack(  # noqa: E731
+                [ops.spike_broadcast(s1[t], w_fc, capacity=cap)
+                 for t in range(cfg.num_ts)]).sum(axis=0)
+
+    return OpTable(name="spike", rsnn_cell=cell, ff_matmul=ff, fc=fc,
+                   mxu_aligned=False)
+
+
 @register("fused")
 def _build_fused(ctx: BackendContext) -> OpTable:
     """Single-dispatch mega-step: the op table collapses to one call.
@@ -266,10 +360,26 @@ def _build_fused(ctx: BackendContext) -> OpTable:
     binding, so a new layout plugs into the mega-step without a backend
     edit.  Bit-identical to ``jnp`` (tests/test_megastep.py).
     """
+    return _fused_table(ctx, spike=False)
+
+
+@register("fused_spike")
+def _build_fused_spike(ctx: BackendContext) -> OpTable:
+    """The mega-step with its spike mode on: one dispatch per chunk, with
+    the three spike-consuming matmuls and the dense FC modes running over
+    compacted event lists (``kernels/spike_broadcast.gather_matmul``) —
+    input-side zero skipping inside the single-dispatch frame step, still
+    bit-identical to ``jnp``.
+    """
+    return _fused_table(ctx, spike=True)
+
+
+def _fused_table(ctx: BackendContext, *, spike: bool) -> OpTable:
+    name = "fused_spike" if spike else "fused"
     cfg = ctx.cfg
     if not cfg.merged_spike:
         raise ValueError(
-            "the 'fused' backend's mega-step kernel implements the "
+            f"the {name!r} backend's mega-step kernel implements the "
             "merged-spike readout (paper §II-D2); per-ts readout needs "
             "another backend")
     names = ("l0_wx", "l0_wh", "l1_wx", "l1_wh")
@@ -300,7 +410,7 @@ def _build_fused(ctx: BackendContext) -> OpTable:
             state.h1, state.lif1.u, state.lif1.spike,
             lif["beta0"], lif["vth0"], lif["beta1"], lif["vth1"],
             wargs, fcargs, precision=ctx.precision, fc_mode=fc_mode,
-            input_bits=cfg.input_bits, **statics)
+            input_bits=cfg.input_bits, spike=spike, **statics)
         s0, u0, s1, u1, logits, sp0, sp1, union, bits = outs
         new_state = RSNNState(h0=s0, h1=s1,
                               lif0=LIFState(u=u0, spike=s0[-1]),
@@ -314,11 +424,11 @@ def _build_fused(ctx: BackendContext) -> OpTable:
     def _collapsed(op: str) -> Callable:
         def call(*_a, **_k):
             raise RuntimeError(
-                f"the 'fused' backend executes the whole frame step as one "
-                f"megastep dispatch; {op!r} is not separately callable")
+                f"the {name!r} backend executes the whole frame step as "
+                f"one megastep dispatch; {op!r} is not separately callable")
 
         return call
 
-    return OpTable(name="fused", rsnn_cell=_collapsed("rsnn_cell"),
+    return OpTable(name=name, rsnn_cell=_collapsed("rsnn_cell"),
                    ff_matmul=_collapsed("ff_matmul"), fc=_collapsed("fc"),
                    mxu_aligned=False, megastep=megastep)

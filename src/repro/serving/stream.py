@@ -106,6 +106,10 @@ class EngineConfig:
     sparse_fc: bool = False  # zero-skip CSC path for the pruned FC
     input_scale: float | jax.Array | None = None  # static 8-bit calibration
     delta_threshold: float = 0.0  # delta backend: |x_t - x_prev| gate (LSBs)
+    spike_capacity: int | None = None  # spike/delta: event-list slots per
+    # row (None = sized to the contraction dim, lossless and bit-identical;
+    # smaller values model a finite hardware event queue and truncate each
+    # row's highest-index spike events)
 
     def __post_init__(self):
         if self.backend not in backends.available():
@@ -123,6 +127,15 @@ class EngineConfig:
             raise ValueError(
                 "delta_threshold is the 'delta' backend's knob; backend "
                 f"{self.backend!r} would silently ignore it")
+        if self.spike_capacity is not None:
+            if self.spike_capacity < 1:
+                raise ValueError(
+                    f"spike_capacity must be >= 1, got {self.spike_capacity}")
+            if self.backend not in ("spike", "delta"):
+                raise ValueError(
+                    "spike_capacity is the event-queue knob of the 'spike'"
+                    " and 'delta' backends; backend "
+                    f"{self.backend!r} would silently ignore it")
 
     @property
     def wants_sparse_fc(self) -> bool:
@@ -235,7 +248,8 @@ class CompiledRSNN:
         self._ctx = backends.BackendContext(
             cfg=cfg, precision=engine.precision,
             sparse_fc=engine.wants_sparse_fc, dense=dense, quant=quant,
-            sparse=csc, delta_threshold=engine.delta_threshold)
+            sparse=csc, delta_threshold=engine.delta_threshold,
+            spike_capacity=engine.spike_capacity)
         self.ops = backends.resolve(engine.backend, self._ctx)
         self._w = self._ctx.dense
 
